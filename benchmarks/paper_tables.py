@@ -1,0 +1,145 @@
+"""One benchmark per paper table.
+
+Hardware columns (slices, MHz) need synthesis; the architecture-level
+columns — schedule, cycle counts, latency bounds, min set sizes, adder
+utilization, exactness — are measured on the cycle-accurate simulators,
+and the production JAX layer is timed for throughput.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.circuit import INTAC, JugglePAC, jugglepac_min_set_size
+from repro.core.segmented import segment_sum_ref, segments_from_lengths
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5, **kw):
+    fn(*args, **kw)                      # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") or \
+        isinstance(out, jnp.ndarray) else None
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def table1_schedule(rows):
+    """Table I: the JugglePAC schedule for 3 sets (5,4,9 elems), L=2."""
+    pac = JugglePAC(adder_latency=2, num_registers=4)
+    sets = [[1, 2, 3, 4, 5], [10, 20, 30, 40],
+            [100, 200, 300, 400, 500, 600, 700, 800, 900]]
+    res = pac.run(sets)
+    total_cycles = max(r.cycle for r in res)
+    in_order = [r.set_index for r in res] == [0, 1, 2]
+    correct = all(abs(r.value - sum(s)) < 1e-9 for r, s in zip(res, sets))
+    issues = len(pac.adder_issue_log)
+    rows.append(("table1_schedule_cycles", total_cycles,
+                 f"in_order={in_order} correct={correct} "
+                 f"adder_issues={issues} (paper: result@16,17)"))
+
+
+def table2_pis_registers(rows):
+    """Table II: min set size + latency constant vs #PIS registers, L=14."""
+    paper = {2: 94, 4: 29, 8: 18}
+    for regs in (2, 4, 8):
+        t0 = time.perf_counter()
+        m = jugglepac_min_set_size(14, regs)
+        us = (time.perf_counter() - t0) * 1e6
+        # worst latency constant at n=128 (the paper's test length)
+        pac = JugglePAC(14, regs)
+        res = pac.run([[1.0] * 128 for _ in range(6)])
+        c = max(r.latency - 128 for r in res)
+        rows.append((f"table2_minset_regs{regs}", us,
+                     f"min_set={m} paper={paper[regs]} latency<=DS+{c} "
+                     f"(paper: DS+110..113)"))
+
+
+def table3_accumulator_comparison(rows):
+    """Table III: design comparison.  Cycle-level: JugglePAC (1 adder) vs a
+    serial accumulator (1 adder, stalls) on back-to-back sets; plus wall
+    time of the production segmented-sum paths."""
+    sets = [[float(j) for j in range(128)] for _ in range(8)]
+    n_inputs = sum(len(s) for s in sets)
+
+    pac = JugglePAC(14, 4)
+    res = pac.run(sets)
+    pac_cycles = max(r.cycle for r in res)
+
+    # serial pipelined accumulator: one in-flight addition per set; inputs
+    # stall whenever the adder is busy -> n * L cycles per set
+    serial_cycles = sum(len(s) for s in sets) * 14
+
+    rows.append(("table3_jugglepac_cycles", pac_cycles,
+                 f"{n_inputs} inputs back-to-back, 1 adder, L=14; "
+                 f"throughput={n_inputs / pac_cycles:.2f} inputs/cycle"))
+    rows.append(("table3_serial_cycles", serial_cycles,
+                 f"stalling serial accumulator "
+                 f"({serial_cycles / pac_cycles:.1f}x slower)"))
+
+    # production layer: variable-length segmented sum, three impls
+    rng = np.random.RandomState(0)
+    lens = rng.randint(64, 256, size=64)
+    total = int(lens.sum())
+    vals = jnp.asarray(rng.randn(total, 128).astype(np.float32))
+    ids = segments_from_lengths(jnp.asarray(lens), total)
+
+    ref = jax.jit(lambda v, i: segment_sum_ref(v, i, 64))
+    us_ref = _time(ref, vals, ids)
+    us_kernel = _time(lambda v, i: ops.segment_sum(v, i, 64), vals, ids)
+    rows.append(("table3_segsum_scatter_ref_us", us_ref,
+                 f"{total} rows x 128, 64 segments"))
+    rows.append(("table3_segsum_jugglepac_kernel_us", us_kernel,
+                 "pallas interpret on CPU (TPU schedule validation, "
+                 "not a wall-clock claim)"))
+
+
+def table5_intac(rows):
+    """Table V: INTAC latency/parameters + exactness of the fixed-point
+    accumulation vs float summation."""
+    for n_in, fas in ((1, 1), (1, 2), (1, 16), (2, 16)):
+        it = INTAC(64, 128, n_in, fas)
+        res = it.accumulate(list(range(1000)))
+        lat = res.cycle
+        eq1 = INTAC.latency_eq1(1000, n_in, 128, fas)
+        rows.append((f"table5_intac_in{n_in}_fa{fas}_cycles", lat,
+                     f"eq1={eq1} min_set={it.min_set_size()} "
+                     f"(paper latency N/{n_in}+{-(-128 // fas)})"))
+
+    # exactness + determinism: integer-domain accumulation (bounded-range
+    # data, the paper's fixed-point assumption) vs a true serial fp32 sum
+    # and numpy's pairwise sum (a reduction tree, like our Fig.2 schedule).
+    rng = np.random.RandomState(1)
+    x = rng.randn(1 << 14).astype(np.float32)
+    exact = float(np.sum(x.astype(np.float64)))
+    acc = np.float32(0.0)
+    for v in x:                                   # genuinely serial
+        acc = np.float32(acc + v)
+    err_serial = abs(float(acc) - exact)
+    err_pairwise = abs(float(x.sum(dtype=np.float32)) - exact)
+
+    from repro.core.intac import LimbState, limb_finalize
+    from repro.kernels.ref import intac_accum_ref, limbs_to_float
+    scale = np.float32(2.0 ** 24)
+    limbs = intac_accum_ref(jnp.asarray(x)[:, None], scale)
+    err_intac = abs(float(limbs_to_float(limbs, scale)[0]) - exact)
+    rows.append(("table5_intac_abs_err", err_intac,
+                 f"serial_fp32_err={err_serial:.3e} "
+                 f"pairwise_tree_err={err_pairwise:.3e} "
+                 "(integer accumulation: exact, one final rounding)"))
+
+    # determinism under permutation (the non-associativity problem)
+    from repro.core.intac import intac_sum
+    perm = rng.permutation(len(x))
+    det = float(intac_sum(jnp.asarray(x))) == \
+        float(intac_sum(jnp.asarray(x[perm])))
+    acc2 = np.float32(0.0)
+    for v in x[perm]:
+        acc2 = np.float32(acc2 + v)
+    rows.append(("table5_intac_permutation_invariant", int(det),
+                 f"fp32_serial_changes_by={abs(float(acc2 - acc)):.3e}"))

@@ -1,0 +1,196 @@
+"""§Perf hillclimbing harness: compile a cell under named variants and
+report the roofline-term deltas.
+
+Each variant is a hypothesis about the dominant roofline term; the harness
+re-lowers the cell with the change applied and prints before/after terms.
+Results are logged to EXPERIMENTS.md §Perf by hand with the hypothesis and
+verdict.
+
+    PYTHONPATH=src python -m benchmarks.perf_experiments \
+        --arch deepseek-7b --shape train_4k --variants baseline,no_sp
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.launch.dryrun as dr
+from repro.configs import get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES_BY_NAME
+
+from benchmarks import roofline as rl
+
+
+def apply_variant(name: str):
+    """Monkeypatch the distribution plan for one named variant.
+    Returns a restore() callable."""
+    orig_plan = shd.mesh_plan
+    orig_param_specs = shd.param_specs
+    orig_cache_specs = shd.cache_specs
+
+    if name == "baseline":
+        pass
+    elif name == "no_sp":
+        def plan(cfg, shape, mesh):
+            p = orig_plan(cfg, shape, mesh)
+            p["act_sp_axis"] = None
+            return p
+        shd.mesh_plan = plan
+    elif name == "no_fsdp":
+        def pspecs(cfg, params, *, fsdp_axis="data", replicate_all=False):
+            return orig_param_specs(cfg, params, fsdp_axis=None,
+                                    replicate_all=replicate_all)
+        shd.param_specs = pspecs
+    elif name == "no_sp_no_fsdp":
+        def plan(cfg, shape, mesh):
+            p = orig_plan(cfg, shape, mesh)
+            p["act_sp_axis"] = None
+            return p
+        def pspecs(cfg, params, *, fsdp_axis="data", replicate_all=False):
+            return orig_param_specs(cfg, params, fsdp_axis=None,
+                                    replicate_all=replicate_all)
+        shd.mesh_plan = plan
+        shd.param_specs = pspecs
+    elif name.startswith("no_sp_mb"):
+        m = int(name.split("mb")[1])
+        def plan(cfg, shape, mesh):
+            p = orig_plan(cfg, shape, mesh)
+            p["act_sp_axis"] = None
+            return p
+        shd.mesh_plan = plan
+        dr.TRAIN_MICROBATCHES = m
+    elif name == "cache_hd_sharded":
+        # prefill/decode caches: shard head_dim on 'model' instead of the
+        # sequence axis (avoids the batch->seq reshard of the cache output)
+        def cspecs(cfg, caches, dp, *, seq_axes=("model",)):
+            from repro.models import attention as attn
+            base = orig_cache_specs(cfg, caches, dp, seq_axes=(None,))
+            def fix(c):
+                core = c["core"]
+                if isinstance(core, attn.KVCache):
+                    return {"core": attn.KVCache(
+                        k=P(None, dp, None, None, "model"),
+                        v=P(None, dp, None, None, "model"),
+                        length=P(None, dp))}
+                return c
+            return [fix(c) for c in base]
+        shd.cache_specs = cspecs
+    elif name == "mixtral_best":
+        # combined: (no-SP default) + mb8 + cf1.0 + bf16 expert combine
+        import dataclasses
+        import repro.configs as cfgs
+        orig_get = cfgs.get_config
+        def getc(arch):
+            c = orig_get(arch)
+            if c.moe:
+                c = c.scaled(moe=dataclasses.replace(c.moe,
+                                                     capacity_factor=1.0),
+                             moe_bf16_combine=True)
+            return c
+        cfgs.get_config = getc
+        dr.get_config = getc
+        dr.TRAIN_MICROBATCHES = 8
+    elif name == "mixtral_best4":
+        import dataclasses
+        import repro.configs as cfgs
+        orig_get = cfgs.get_config
+        def getc(arch):
+            c = orig_get(arch)
+            if c.moe:
+                c = c.scaled(moe=dataclasses.replace(c.moe,
+                                                     capacity_factor=1.0),
+                             moe_bf16_combine=True)
+            return c
+        cfgs.get_config = getc
+        dr.get_config = getc
+        # mb stays at the plan default (4)
+    elif name == "mixtral_vexp":
+        # virtual experts: 8 experts x2 column shards = exact EP-16;
+        # the expert-TP f32 partial AR disappears into the combine gather
+        import dataclasses
+        import repro.configs as cfgs
+        orig_get = cfgs.get_config
+        def getc(arch):
+            c = orig_get(arch)
+            if c.moe:
+                c = c.scaled(moe=dataclasses.replace(c.moe,
+                                                     capacity_factor=1.0),
+                             moe_virtual_split=2)
+            return c
+        cfgs.get_config = getc
+        dr.get_config = getc
+    elif name == "ep_capacity_2x":
+        import repro.models.moe as moe_mod
+        moe_mod.MOE_GROUP_SAVED = moe_mod.MOE_GROUP
+        # tighter capacity: cf 1.0 instead of 1.25 (fewer padded slots)
+        import dataclasses
+        import repro.configs as cfgs
+        orig_get = cfgs.get_config
+        def getc(arch):
+            c = orig_get(arch)
+            if c.moe:
+                c = c.scaled(moe=dataclasses.replace(c.moe,
+                                                     capacity_factor=1.0))
+            return c
+        cfgs.get_config = getc
+        dr.get_config = getc
+    else:
+        raise ValueError(name)
+
+    def restore():
+        shd.mesh_plan = orig_plan
+        shd.param_specs = orig_param_specs
+        shd.cache_specs = orig_cache_specs
+        dr.TRAIN_MICROBATCHES = 1
+
+    return restore
+
+
+def run(arch: str, shape_name: str, variants, out_dir: str):
+    mesh = make_production_mesh()
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    print(f"{'variant':18s} {'compute_s':>9s} {'mem_floor':>9s} "
+          f"{'collect_s':>9s} {'temp_GB':>8s} {'AG_GB':>7s} {'AR_GB':>7s}")
+    for name in variants:
+        restore = apply_variant(name)
+        try:
+            rec = dr.run_cell(arch, shape_name, mesh,
+                              f"hc_{name}", with_cost_variants=True)
+            row = rl.analyze_cell(rec, cfg, shape)
+            coll = rec["cost_extrapolated"]["collective_bytes"]
+            print(f"{name:18s} {row['compute_s']:9.3f} "
+                  f"{row['memory_s']:9.4f} {row['collective_s']:9.3f} "
+                  f"{row['temp_gb']:8.1f} {coll['all-gather'] / 1e9:7.1f} "
+                  f"{coll['all-reduce'] / 1e9:7.1f}")
+            (out / f"{arch}__{shape_name}__{name}.json").write_text(
+                json.dumps(rec, indent=1))
+        except Exception as e:
+            print(f"{name:18s} FAILED: {type(e).__name__}: {str(e)[:160]}")
+        finally:
+            restore()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+    run(args.arch, args.shape, args.variants.split(","), args.out)
+
+
+if __name__ == "__main__":
+    main()

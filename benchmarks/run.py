@@ -1,0 +1,44 @@
+"""Benchmark harness: one function per paper table + the roofline summary.
+
+Prints ``name,value,derived`` CSV.  Cycle-level numbers come from the
+cycle-accurate simulators (the paper's own metrics); wall-clock numbers are
+CPU-host timings of the production JAX layer (relative comparisons only —
+TPU roofline projections live in benchmarks/roofline.py).
+
+    PYTHONPATH=src python -m benchmarks.run [--with-roofline]
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+from benchmarks import paper_tables
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--with-roofline", action="store_true",
+                    help="also rebuild the roofline table from "
+                         "experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    rows = []
+    paper_tables.table1_schedule(rows)
+    paper_tables.table2_pis_registers(rows)
+    paper_tables.table3_accumulator_comparison(rows)
+    paper_tables.table5_intac(rows)
+
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.6g},{derived}")
+
+    if args.with_roofline and Path("experiments/dryrun").exists():
+        from benchmarks import roofline
+        rl = roofline.build_table("experiments/dryrun")
+        print()
+        print(roofline.to_markdown(rl))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Batched serving example: continuous-batch generation with mixed prompt
+lengths, greedy + sampled requests, eos stopping.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch stablelm-1.6b]
+"""
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--batch", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = Engine(cfg, params, max_len=256)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.batch):
+        plen = int(rng.integers(3, 48))
+        reqs.append(Request(
+            prompt=list(rng.integers(1, cfg.vocab, plen)),
+            max_new_tokens=args.new_tokens,
+            temperature=0.0 if i % 2 == 0 else 0.8,
+            eos_id=int(rng.integers(1, cfg.vocab)) if i % 3 == 0 else None))
+
+    t0 = time.time()
+    results = engine.generate(reqs)
+    dt = time.time() - t0
+    new = sum(len(r.tokens) - r.prompt_len for r in results)
+    for i, r in enumerate(results):
+        mode = "greedy" if reqs[i].temperature == 0 else "t=0.8"
+        print(f"req{i} ({mode}, prompt={r.prompt_len:2d}): "
+              f"+{len(r.tokens) - r.prompt_len} -> "
+              f"{r.tokens[r.prompt_len:r.prompt_len + 10]}")
+    print(f"\n{new} tokens in {dt:.2f}s = {new / dt:.1f} tok/s "
+          f"(batched, CPU smoke config)")
+
+
+if __name__ == "__main__":
+    main()

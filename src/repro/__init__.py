@@ -1,0 +1,5 @@
+"""repro — JugglePAC/INTAC (pipelined accumulation) as a TPU-native
+streaming-reduction framework: faithful cycle-accurate reproduction plus a
+multi-pod JAX training/inference stack built on the technique."""
+
+__version__ = "1.0.0"

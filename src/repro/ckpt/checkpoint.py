@@ -1,0 +1,138 @@
+"""Checkpointing: msgpack+zstd pytree snapshots with restart semantics.
+
+Design for the fault-tolerance story (multi-thousand-node deployments):
+
+  * atomic:      write to ``step_K.tmp`` then rename — a crash mid-write
+                 never corrupts the latest checkpoint;
+  * addressable: one file per host-shard (``shard_{host}of{H}``); each host
+                 writes only the leaves (or leaf-chunks) it owns, so
+                 checkpoint bandwidth scales with the fleet;
+  * restartable: ``latest_step()`` + the data pipeline's skip-to-step give
+                 exact-resume; optimizer state and the data cursor are part
+                 of the snapshot;
+  * elastic:     restore() reads the *logical* (unsharded) tree and lets
+                 jax.device_put re-shard — restarting on a smaller/larger
+                 mesh (elastic scaling) is a re-shard, not a re-format;
+  * retention:   keep the newest ``keep`` checkpoints, delete older ones.
+
+Format: msgpack map {path: {dtype, shape, raw(zstd)}} + a small json
+manifest.  No orbax dependency — this is the substrate, built here.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_set(tree, key: str, value):
+    """Rebuild is done via unflatten over the original treedef instead."""
+    raise NotImplementedError
+
+
+def save(ckpt_dir: str, step: int, tree, *, host_id: int = 0,
+         num_hosts: int = 1, keep: int = 3, extra: Optional[dict] = None):
+    """Snapshot ``tree`` at ``step``.  Each host writes its shard file."""
+    d = Path(ckpt_dir)
+    tmp = d / f"step_{step:08d}.tmp"
+    final = d / f"step_{step:08d}"
+    (tmp if host_id == 0 else tmp).mkdir(parents=True, exist_ok=True)
+
+    comp = zstd.ZstdCompressor(level=3)
+    payload = {}
+    for i, (key, leaf) in enumerate(sorted(_flatten(tree).items())):
+        if i % num_hosts != host_id:
+            continue                      # leaf-level host sharding
+        arr = np.asarray(jax.device_get(leaf))
+        payload[key] = {
+            "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": comp.compress(arr.tobytes()),
+        }
+    shard_file = tmp / f"shard_{host_id:05d}of{num_hosts:05d}.msgpack"
+    with open(shard_file, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+    if host_id == 0:
+        manifest = {"step": step, "num_hosts": num_hosts,
+                    "time": time.time(), "extra": extra or {}}
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        # barrier point in a real multi-host run; single-host: rename now
+        os.replace(tmp, final)
+        _retain(d, keep)
+    return str(final)
+
+
+def _retain(d: Path, keep: int):
+    steps = sorted(p for p in d.iterdir()
+                   if p.is_dir() and p.name.startswith("step_")
+                   and not p.name.endswith(".tmp"))
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.iterdir()
+             if p.is_dir() and p.name.startswith("step_")
+             and not p.name.endswith(".tmp")
+             and (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree, *,
+            shardings=None) -> Any:
+    """Restore into the structure of ``like_tree``.
+
+    ``shardings``: optional pytree of NamedSharding — leaves are placed
+    directly onto the (possibly different — elastic restart) mesh.
+    """
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    dec = zstd.ZstdDecompressor()
+    raw = {}
+    for shard_file in sorted(d.glob("shard_*.msgpack")):
+        with open(shard_file, "rb") as f:
+            raw.update(msgpack.unpackb(f.read(), raw=False))
+
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(
+        like_tree)
+    shard_flat = (None if shardings is None else
+                  [s for _, s in
+                   jax.tree_util.tree_flatten_with_path(shardings)[0]])
+    out = []
+    for i, (path, leaf) in enumerate(leaves_with_paths):
+        key = "/".join(str(p) for p in path)
+        if key not in raw:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        ent = raw[key]
+        arr = np.frombuffer(dec.decompress(ent["data"]),
+                            dtype=ent["dtype"]).reshape(ent["shape"])
+        if shard_flat is not None:
+            out.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+def save_every(step: int, interval: int) -> bool:
+    return interval > 0 and step > 0 and step % interval == 0

@@ -1,0 +1,25 @@
+"""repro.core — the paper's contribution as composable JAX modules.
+
+Faithful layer:
+  circuit.JugglePAC / circuit.INTAC      cycle-accurate simulators
+  circuit_jax.jugglepac_scan             the same FSM as a lax.scan
+
+Production (TPU-native) layer:
+  trees        fixed pairing-tree reduction schedules
+  segmented    segmented streaming reduction (variable-length sets)
+  intac        exact integer-domain accumulation + deterministic /
+               compressed collectives
+  juggler      bounded-slot streaming gradient accumulation
+"""
+
+from . import circuit, circuit_jax, intac, juggler, segmented, trees  # noqa: F401
+from .circuit import INTAC, JugglePAC, jugglepac_min_set_size  # noqa: F401
+from .intac import (compressed_psum_mean, compressed_psum_mean_tree,  # noqa: F401
+                    intac_psum, intac_sum, limb_add, limb_finalize,
+                    limb_init, limb_merge)
+from .juggler import (accumulate_microbatch_grads, juggler_finalize,  # noqa: F401
+                      juggler_init, juggler_push, num_slots_for)
+from .segmented import (combine_flash_partials_tree, flash_partial_combine,  # noqa: F401
+                        segment_mean, segment_sum_blocked, segment_sum_ref,
+                        segments_from_lengths)
+from .trees import pairwise_tree_sum, pairwise_tree_sum_pytree, tree_combine  # noqa: F401

@@ -1,0 +1,199 @@
+"""JugglePAC as a jit-able ``jax.lax.scan`` state machine.
+
+This is the same cycle-accurate circuit as ``core.circuit.JugglePAC``,
+re-expressed with fixed-shape JAX arrays so it can be jit-compiled, vmapped
+over parameter sweeps, and property-tested at scale against the Python
+golden model.  One scan step == one clock cycle.
+
+State layout (all fixed shapes; L = adder latency, R = PIS registers):
+  pipe_v   (L,)  values in flight in the adder pipeline
+  pipe_l   (L,)  labels accompanying them (the paper's shift register)
+  pipe_en  (L,)  the shift register's inEn bit
+  reg_v    (R,)  PIS register file (intermediate results, addressed by label)
+  reg_en   (R,)  occupancy
+  reg_cnt  (R,)  Algorithm-2 timeout counters
+  reg_set  (R,)  which global set index owns the slot
+  label_set(R,)  which set index currently owns each label
+  fifo_*   (4,)  the 4-slot ready-pair FIFO
+  fsm state, pending input register, current set/label counters
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FIFO_DEPTH = 4
+
+
+class PacState(NamedTuple):
+    pipe_v: jnp.ndarray
+    pipe_l: jnp.ndarray
+    pipe_en: jnp.ndarray
+    reg_v: jnp.ndarray
+    reg_en: jnp.ndarray
+    reg_cnt: jnp.ndarray
+    reg_set: jnp.ndarray
+    label_set: jnp.ndarray
+    fifo_a: jnp.ndarray
+    fifo_b: jnp.ndarray
+    fifo_l: jnp.ndarray
+    fifo_n: jnp.ndarray      # scalar int32: occupancy
+    fsm: jnp.ndarray         # scalar int32: 0 / 1 (pending first-of-pair?)
+    pend_v: jnp.ndarray
+    pend_l: jnp.ndarray
+    cur_set: jnp.ndarray     # scalar int32: index of current set (-1 before any)
+    cur_label: jnp.ndarray
+
+
+def init_state(latency: int, num_registers: int,
+               dtype=jnp.float32) -> PacState:
+    L, R = latency, num_registers
+    z = jnp.zeros
+    return PacState(
+        pipe_v=z((L,), dtype), pipe_l=z((L,), jnp.int32), pipe_en=z((L,), jnp.bool_),
+        reg_v=z((R,), dtype), reg_en=z((R,), jnp.bool_),
+        reg_cnt=z((R,), jnp.int32), reg_set=-jnp.ones((R,), jnp.int32),
+        label_set=-jnp.ones((R,), jnp.int32),
+        fifo_a=z((FIFO_DEPTH,), dtype), fifo_b=z((FIFO_DEPTH,), dtype),
+        fifo_l=z((FIFO_DEPTH,), jnp.int32), fifo_n=jnp.int32(0),
+        fsm=jnp.int32(0), pend_v=z((), dtype), pend_l=jnp.int32(0),
+        cur_set=jnp.int32(-1), cur_label=jnp.int32(0))
+
+
+def _step(latency: int, num_registers: int, state: PacState,
+          inp) -> Tuple[PacState, Tuple]:
+    """One clock cycle. ``inp`` = (value f32, start bool, valid bool)."""
+    L, R = latency, num_registers
+    v, start, valid = inp
+    s = state
+
+    is_start = valid & start
+    is_cont = valid & ~start
+    idle = ~valid
+
+    have_pending = s.fsm == 1
+
+    # --- FSM / input pairing (Algorithm 1) -------------------------------
+    # Issue from the input path?
+    flush = (is_start | idle) & have_pending          # dangling odd element
+    pair = is_cont & have_pending                     # raw input pair
+    input_issue = flush | pair
+
+    issue_a = s.pend_v
+    issue_b = jnp.where(pair, v, jnp.zeros_like(v))
+    issue_l = s.pend_l
+
+    # New-set bookkeeping.
+    new_set = jnp.where(is_start, s.cur_set + 1, s.cur_set)
+    new_label = jnp.where(is_start, (s.cur_set + 1) % R, s.cur_label)
+    label_set = jnp.where(
+        is_start, s.label_set.at[new_label].set(new_set), s.label_set)
+
+    # Pending register update.
+    stash = is_start | (is_cont & ~have_pending)
+    pend_v = jnp.where(stash, v, s.pend_v)
+    pend_l = jnp.where(stash, new_label, s.pend_l)
+    fsm = jnp.where(stash, 1, jnp.where(input_issue, 0, s.fsm)).astype(jnp.int32)
+
+    # --- FIFO issue when the adder slot is free ---------------------------
+    fifo_issue = (~input_issue) & (s.fifo_n > 0)
+    issue_a = jnp.where(fifo_issue, s.fifo_a[0], issue_a)
+    issue_b = jnp.where(fifo_issue, s.fifo_b[0], issue_b)
+    issue_l = jnp.where(fifo_issue, s.fifo_l[0], issue_l)
+    issue_en = input_issue | fifo_issue
+
+    pop = fifo_issue
+    fifo_a = jnp.where(pop, jnp.roll(s.fifo_a, -1), s.fifo_a)
+    fifo_b = jnp.where(pop, jnp.roll(s.fifo_b, -1), s.fifo_b)
+    fifo_l = jnp.where(pop, jnp.roll(s.fifo_l, -1), s.fifo_l)
+    fifo_n = s.fifo_n - pop.astype(jnp.int32)
+
+    # --- adder pipeline tick ----------------------------------------------
+    out_v = s.pipe_v[L - 1]
+    out_l = s.pipe_l[L - 1]
+    out_en = s.pipe_en[L - 1]
+    pipe_v = jnp.concatenate([jnp.where(issue_en, issue_a + issue_b,
+                                        jnp.zeros_like(issue_a))[None],
+                              s.pipe_v[:-1]])
+    pipe_l = jnp.concatenate([issue_l[None], s.pipe_l[:-1]])
+    pipe_en = jnp.concatenate([issue_en[None], s.pipe_en[:-1]])
+
+    # --- PIS insert (pair identification) ---------------------------------
+    reg_v, reg_en, reg_cnt, reg_set = s.reg_v, s.reg_en, s.reg_cnt, s.reg_set
+    slot_occupied = reg_en[out_l]
+    make_pair = out_en & slot_occupied
+    store = out_en & ~slot_occupied
+
+    # pair -> FIFO push
+    push_idx = jnp.clip(fifo_n, 0, FIFO_DEPTH - 1)
+    fifo_a = jnp.where(make_pair, fifo_a.at[push_idx].set(reg_v[out_l]), fifo_a)
+    fifo_b = jnp.where(make_pair, fifo_b.at[push_idx].set(out_v), fifo_b)
+    fifo_l = jnp.where(make_pair, fifo_l.at[push_idx].set(out_l), fifo_l)
+    overflow = make_pair & (fifo_n >= FIFO_DEPTH)
+    fifo_n = fifo_n + make_pair.astype(jnp.int32)
+
+    reg_v = jnp.where(store, reg_v.at[out_l].set(out_v), reg_v)
+    reg_en = jnp.where(make_pair, reg_en.at[out_l].set(False),
+                       jnp.where(store, reg_en.at[out_l].set(True), reg_en))
+    reg_cnt = jnp.where(out_en, reg_cnt.at[out_l].set(0), reg_cnt)
+    reg_set = jnp.where(store, reg_set.at[out_l].set(label_set[out_l]), reg_set)
+
+    # --- Algorithm 2: timeout scan (single output port) --------------------
+    thresh = L + 3
+    ready = reg_en & (reg_cnt >= thresh)
+    any_ready = jnp.any(ready)
+    emit_i = jnp.argmax(ready)          # lowest ready index
+    res_v = reg_v[emit_i]
+    res_set = reg_set[emit_i]
+    res_en = any_ready
+
+    reg_en = jnp.where(any_ready, reg_en.at[emit_i].set(False), reg_en)
+    reg_cnt = jnp.where(any_ready, reg_cnt.at[emit_i].set(0), reg_cnt)
+    reg_set = jnp.where(any_ready, reg_set.at[emit_i].set(-1), reg_set)
+    # saturating increment for occupied, non-emitted registers
+    reg_cnt = jnp.where(reg_en, jnp.minimum(reg_cnt + 1, thresh), reg_cnt)
+
+    new_state = PacState(pipe_v, pipe_l, pipe_en, reg_v, reg_en, reg_cnt,
+                         reg_set, label_set, fifo_a, fifo_b, fifo_l, fifo_n,
+                         fsm, pend_v, pend_l, new_set, new_label)
+    return new_state, (res_v, res_set, res_en, overflow)
+
+
+@partial(jax.jit, static_argnames=("latency", "num_registers"))
+def jugglepac_scan(values: jnp.ndarray, starts: jnp.ndarray,
+                   valids: jnp.ndarray, *, latency: int = 14,
+                   num_registers: int = 4):
+    """Run the circuit for ``len(values)`` cycles (pad with valid=False to
+    drain).  Returns per-cycle (result, set_index, result_valid, overflow)."""
+    state = init_state(latency, num_registers, values.dtype)
+    step = partial(_step, latency, num_registers)
+    _, outs = jax.lax.scan(step, state,
+                           (values, starts.astype(bool), valids.astype(bool)))
+    return outs
+
+
+def run_sets(sets, *, latency: int = 14, num_registers: int = 4,
+             drain: int | None = None):
+    """Convenience mirror of ``circuit.JugglePAC.run`` for the JAX model."""
+    if drain is None:
+        drain = 8 * latency + 32 + max((len(s) for s in sets), default=0)
+    vals, starts, valids = [], [], []
+    for s in sets:
+        for j, x in enumerate(s):
+            vals.append(x); starts.append(j == 0); valids.append(True)
+    vals += [0.0] * drain
+    starts += [False] * drain
+    valids += [False] * drain
+    v = jnp.asarray(vals, jnp.float32)
+    st = jnp.asarray(starts)
+    en = jnp.asarray(valids)
+    res_v, res_set, res_en, ovf = jugglepac_scan(
+        v, st, en, latency=latency, num_registers=num_registers)
+    res_v, res_set, res_en = map(jax.device_get, (res_v, res_set, res_en))
+    out = [(int(si), float(rv), int(cy))
+           for cy, (rv, si, re) in enumerate(zip(res_v, res_set, res_en)) if re]
+    return out, bool(jax.device_get(ovf).any())

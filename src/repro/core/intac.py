@@ -1,0 +1,187 @@
+"""INTAC on TPU: exact accumulation in an integer (carry-save-like) domain.
+
+The circuit's insight — *accumulate in a redundant/exact representation with
+a tiny per-step critical path, and pay for the expensive normalization only
+once per set* — maps onto TPU as fixed-point accumulation:
+
+  * per-element work: quantize fp32 -> int32 (cheap, VPU) and integer-add
+    (exact, associative — the carry-save analogue);
+  * the "final addition" (limb carry-resolve + dequantize back to float)
+    happens once per segment / step / all-reduce, amortized exactly like the
+    resource-shared final adder in Fig. 5.
+
+Because integer addition is associative, the accumulation result is
+**bitwise independent of reduction order** — blocks, devices, pods — which is
+the TPU answer to the paper's FP non-associativity problem, and the basis of:
+
+  * ``intac_sum``           — exact, deterministic sum of an fp32 array;
+  * ``LimbAccumulator``     — two-limb int32 carry-save accumulator (wider
+                              dynamic range, deferred carries; the closest
+                              software analogue of (sum, carry) feedback);
+  * ``intac_psum``          — deterministic cross-device reduction;
+  * ``CompressedAllReduce`` — int8/int16-quantized gradient all-reduce with
+                              error feedback (the distributed-optimization
+                              use of the same primitive).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# int32 headroom: values quantized to <= 2^QBITS-1 in magnitude can be
+# accumulated 2^(31-QBITS) times with no overflow.
+_I32_BITS = 31
+
+
+def choose_scale(max_abs: jnp.ndarray, num_terms: int,
+                 qbits: int = 30) -> jnp.ndarray:
+    """Power-of-two scale s.t. n * |x|_max * scale < 2^qbits.
+
+    A power of two makes quantization error-free for values already
+    representable at the target precision, mirroring the paper's
+    "specific accuracy range" argument for fixed point.
+    """
+    max_abs = jnp.maximum(max_abs, jnp.float32(1e-30))
+    budget = jnp.float32(2.0 ** qbits) / (jnp.float32(num_terms) * max_abs)
+    # ldexp(1, e) is an exact power of two; exp2(float) is approximated on
+    # some backends (observed 2^26 + 64 on XLA CPU) which breaks exactness.
+    e = jnp.floor(jnp.log2(budget)).astype(jnp.int32)
+    return jnp.ldexp(jnp.float32(1.0), e)
+
+
+def quantize(x: jnp.ndarray, scale) -> jnp.ndarray:
+    return jnp.round(x * scale).astype(jnp.int32)
+
+
+def dequantize(q: jnp.ndarray, scale) -> jnp.ndarray:
+    return q.astype(jnp.float32) / scale
+
+
+@partial(jax.jit, static_argnames=("axis",))
+def intac_sum(x: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Exact-within-quantization, order-independent sum along ``axis``.
+
+    Two passes (max, then accumulate) — the first pass plays the role of the
+    paper's a-priori bit-width parameterization.
+    """
+    n = x.shape[axis]
+    max_abs = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = choose_scale(jnp.max(max_abs), n)
+    q = quantize(x, scale)
+    return dequantize(jnp.sum(q, axis=axis), scale)
+
+
+class LimbState(NamedTuple):
+    """Two-limb redundant accumulator — the (sum, carry) pair of Fig. 4.
+
+    value represented = (hi * 2^15 + lo) / scale.  Each limb holds partial
+    sums < 2^15 in magnitude per term, so 2^16 terms accumulate with no
+    overflow and no cross-limb carries until ``finalize`` — deferred carry
+    resolution, exactly the carry-save contract.
+    """
+    hi: jnp.ndarray   # int32
+    lo: jnp.ndarray   # int32
+    scale: jnp.ndarray
+
+
+LIMB_SHIFT = 15
+
+
+def limb_init(shape, scale) -> LimbState:
+    z = jnp.zeros(shape, jnp.int32)
+    return LimbState(z, z, jnp.asarray(scale, jnp.float32))
+
+
+def limb_add(state: LimbState, x: jnp.ndarray) -> LimbState:
+    """Accumulate one fp32 operand (the 3:2 compressor step)."""
+    q = jnp.round(x * state.scale)
+    hi = jnp.floor(q / (1 << LIMB_SHIFT))
+    lo = q - hi * (1 << LIMB_SHIFT)          # in [0, 2^15)
+    return LimbState(state.hi + hi.astype(jnp.int32),
+                     state.lo + lo.astype(jnp.int32), state.scale)
+
+
+def limb_finalize(state: LimbState) -> jnp.ndarray:
+    """The once-per-set final addition (resource-shared adder analogue).
+
+    The only floating-point rounding in the whole accumulation happens here.
+    """
+    return (state.hi.astype(jnp.float32) * (1 << LIMB_SHIFT)
+            + state.lo.astype(jnp.float32)) / state.scale
+
+
+def limb_merge(a: LimbState, b: LimbState) -> LimbState:
+    """Merging two redundant accumulators is itself exact/associative."""
+    return LimbState(a.hi + b.hi, a.lo + b.lo, a.scale)
+
+
+# ---------------------------------------------------------------------------
+# Distributed reductions
+# ---------------------------------------------------------------------------
+
+
+def intac_psum(x: jnp.ndarray, axis_name, *, qbits: int = 30,
+               nterms: Optional[int] = None) -> jnp.ndarray:
+    """Bitwise-deterministic cross-device sum (shard_map collective).
+
+    All devices agree on a power-of-two scale (via a max-reduce), quantize,
+    integer-psum (associative => any reduction topology gives the same bits),
+    dequantize once.  Works across 'data', ('data','pod'), etc.
+    """
+    n = nterms or jax.lax.psum(1, axis_name)
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = choose_scale(gmax, n, qbits)
+    q = quantize(x, scale)
+    return dequantize(jax.lax.psum(q, axis_name), scale)
+
+
+class EFState(NamedTuple):
+    """Error-feedback residual for compressed gradient all-reduce."""
+    residual: jnp.ndarray
+
+
+def compressed_psum_mean(x: jnp.ndarray, residual: jnp.ndarray, axis_name,
+                         *, bits: int = 8) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """INTAC-style compressed gradient all-reduce with error feedback.
+
+    1. add the residual carried from the previous step (error feedback);
+    2. agree on a shared power-of-two scale targeting ``bits``-bit payloads;
+    3. quantize -> int, psum in the exact integer domain, dequantize once;
+    4. the local quantization error becomes the next residual.
+
+    Communication payload is ``bits``/32 of fp32 (int8 => 4x compression);
+    the integer psum keeps the *reduction* exact and deterministic, so the
+    only loss is the explicit, error-fed-back quantization.
+    Returns (mean gradient, new residual).
+    """
+    xr = x + residual
+    n = jax.lax.psum(1, axis_name)
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(xr)), axis_name)
+    # payload must fit `bits` signed bits; headroom for the n-way sum lives
+    # in the int32 accumulator, not the payload.
+    scale = choose_scale(gmax, 1, qbits=bits - 1)
+    q = quantize(xr, scale)
+    new_residual = xr - dequantize(q, scale)
+    total = jax.lax.psum(q, axis_name)          # int32 accumulate (exact)
+    mean = dequantize(total, scale) / n
+    return mean, new_residual
+
+
+def compressed_psum_mean_tree(grads, residuals, axis_name, *, bits: int = 8):
+    """Pytree version of ``compressed_psum_mean``."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    out, res = [], []
+    for g, r in zip(flat_g, flat_r):
+        m, nr = compressed_psum_mean(g, r, axis_name, bits=bits)
+        out.append(m)
+        res.append(nr)
+    return tdef.unflatten(out), tdef.unflatten(res)
+
+
+def zeros_like_residuals(grads):
+    return jax.tree.map(jnp.zeros_like, grads)

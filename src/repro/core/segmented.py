@@ -1,0 +1,160 @@
+"""Segmented streaming reduction — JugglePAC's task, TPU-native.
+
+The paper's problem statement: values arrive as a flat stream partitioned
+into back-to-back *variable-length sets*; produce one reduction per set,
+in input order, at full throughput, with bounded intermediate storage.
+
+TPU translation: the "stream" is a flat (N, D) array tiled HBM→VMEM in
+blocks; the per-cycle serial input becomes a per-grid-step block; the PIS
+register file becomes a bounded VMEM accumulator addressed by segment label.
+Three implementations share one contract:
+
+  * ``segment_sum_ref``     — pure-jnp oracle (scatter-add).
+  * ``segment_sum_blocked`` — pure-JAX streaming version: ``lax.scan`` over
+    blocks, each block contributes a one-hot matmul (MXU-shaped) into the
+    running output.  This mirrors the circuit: blocks = cycles, the running
+    (S, D) accumulator = the PIS registers, in-order emission by construction.
+  * ``kernels.jugglepac_segsum`` — the Pallas TPU kernel (same schedule,
+    explicit BlockSpec/VMEM tiling).
+
+The bounded-storage guarantee (the paper's "2–8 PIS registers" and the
+minimum-set-size restriction) appears here as ``max_live_segments``: with
+monotone segment ids, a block of B rows can touch at most B+1 segments, and
+a segment completes (can be emitted) as soon as a later id appears — the
+same argument as the paper's L+3 timeout, with the adder latency L replaced
+by the block size B.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .trees import pairwise_tree_sum
+
+
+def segment_sum_ref(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """Oracle: scatter-add per segment. values (N, D) or (N,), ids (N,)."""
+    out_shape = (num_segments,) + values.shape[1:]
+    return jnp.zeros(out_shape, values.dtype).at[segment_ids].add(values)
+
+
+def segment_count_ref(segment_ids: jnp.ndarray, num_segments: int,
+                      valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    w = jnp.ones_like(segment_ids, jnp.float32)
+    if valid is not None:
+        w = w * valid.astype(jnp.float32)
+    return jnp.zeros((num_segments,), jnp.float32).at[segment_ids].add(w)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "block_size"))
+def segment_sum_blocked(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                        num_segments: int, block_size: int = 512) -> jnp.ndarray:
+    """Streaming blocked segmented sum (the software JugglePAC).
+
+    Each scan step consumes one (B, D) block and performs a one-hot matmul
+    (S×B)·(B×D) — the MXU-friendly form of "pair everything in this block by
+    label" — accumulated into the (S, D) running output.  Works for
+    arbitrary (not only monotone) segment ids; `num_segments` is the label
+    space, i.e. the paper's register-file size.
+    """
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
+    n, d = values.shape
+    nb = -(-n // block_size)
+    pad = nb * block_size - n
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        # padded rows point at an out-of-range label -> one-hot row of zeros
+        segment_ids = jnp.pad(segment_ids, (0, pad),
+                              constant_values=num_segments)
+    vb = values.reshape(nb, block_size, d)
+    ib = segment_ids.reshape(nb, block_size)
+
+    def step(acc, blk):
+        v, ids = blk
+        onehot = (ids[:, None] == jnp.arange(num_segments)[None, :])
+        contrib = jnp.einsum("bs,bd->sd", onehot.astype(v.dtype), v)
+        return acc + contrib, None
+
+    acc0 = jnp.zeros((num_segments, d), values.dtype)
+    acc, _ = jax.lax.scan(step, acc0, (vb, ib))
+    return acc[:, 0] if squeeze else acc
+
+
+def segment_mean(values, segment_ids, num_segments, *,
+                 impl=segment_sum_ref, eps: float = 1e-9):
+    s = impl(values, segment_ids, num_segments)
+    c = segment_count_ref(segment_ids, num_segments)
+    c = jnp.maximum(c, eps)
+    return s / c.reshape((num_segments,) + (1,) * (s.ndim - 1))
+
+
+def segments_from_lengths(lengths: jnp.ndarray, total: int) -> jnp.ndarray:
+    """Build a monotone segment-id vector from per-set lengths.
+
+    ``lengths`` (S,) with sum == total -> ids (total,).  The inverse of the
+    paper's `start` bit: start[i] = ids[i] != ids[i-1].
+    """
+    starts = jnp.cumsum(lengths)[:-1]
+    ids = jnp.zeros((total,), jnp.int32).at[starts].add(1)
+    return jnp.cumsum(ids)
+
+
+def max_live_segments(block_size: int) -> int:
+    """Bounded-storage bound: with monotone ids, one block overlaps at most
+    block_size + 1 segments — the analogue of the paper's PIS sizing rule."""
+    return block_size + 1
+
+
+def streaming_logsumexp_combine(m1, l1, m2, l2):
+    """Associative combine for streaming softmax denominators.
+
+    The flash-decode partial states (max m, sum-of-exp l) combine exactly like
+    JugglePAC partial sums: non-associative in fp, so we fix the pairing tree.
+    """
+    m = jnp.maximum(m1, m2)
+    l = l1 * jnp.exp(m1 - m) + l2 * jnp.exp(m2 - m)
+    return m, l
+
+
+def flash_partial_combine(m1, l1, o1, m2, l2, o2):
+    """Combine two flash-attention partial (max, denom, weighted-out) triples."""
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    l = l1 * a1 + l2 * a2
+    o = o1 * a1[..., None] + o2 * a2[..., None]
+    return m, l, o
+
+
+def combine_flash_partials_tree(m, l, o, axis: int = 0):
+    """Fixed pairwise-tree combine of stacked flash partials along ``axis``.
+
+    This is the cross-block / cross-device "state 0" of the decode path: each
+    KV shard produces one partial; partials are juggled pairwise in a fixed
+    tree so the result is independent of arrival order and bitwise
+    reproducible across shardings.
+    """
+    m = jnp.moveaxis(m, axis, 0)
+    l = jnp.moveaxis(l, axis, 0)
+    o = jnp.moveaxis(o, axis, 0)
+    n = m.shape[0]
+    while n > 1:
+        half = n // 2
+        cm, cl, co = flash_partial_combine(
+            m[0:2 * half:2], l[0:2 * half:2], o[0:2 * half:2],
+            m[1:2 * half:2], l[1:2 * half:2], o[1:2 * half:2])
+        if n % 2:
+            m = jnp.concatenate([cm, m[n - 1:n]], 0)
+            l = jnp.concatenate([cl, l[n - 1:n]], 0)
+            o = jnp.concatenate([co, o[n - 1:n]], 0)
+        else:
+            m, l, o = cm, cl, co
+        n = cm.shape[0] + (1 if n % 2 else 0)
+    return m[0], l[0], o[0]

@@ -1,0 +1,84 @@
+"""Fixed pairing-tree reduction schedules.
+
+JugglePAC's central numerical idea is that a pipelined accumulator *must*
+re-order additions, so the re-ordering should follow a fixed, shallow tree
+(Fig. 2): level 1 pairs adjacent raw inputs (FSM state 1), higher levels pair
+partial results (FSM state 0 via the PIS).  On TPU we keep exactly that
+contract:
+
+  * ``pairwise_tree_sum``        — log-depth balanced tree over an axis, with a
+                                   *shape-independent* schedule: the pairing
+                                   pattern depends only on element count, never
+                                   on sharding, so results are bitwise
+                                   reproducible across device layouts.
+  * ``tree_combine``             — same, for an arbitrary associative combine
+                                   (the paper: "any multi-cycle operator").
+  * ``TreeAccumulator`` (juggler.py) uses the streaming binary-counter variant.
+
+Compared with ``jnp.sum`` (whose reduction order is compiler-chosen), the
+fixed tree trades nothing on TPU — XLA lowers it to the same vector adds —
+but pins the addition order, which is the paper's "produce ordered,
+reproducible results despite re-ordered additions" requirement.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_combine(x: jnp.ndarray, axis: int,
+                 combine: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+                 pad_value=0.0) -> jnp.ndarray:
+    """Reduce ``axis`` with a fixed balanced pairing tree.
+
+    Odd remainders at each level pass through untouched — exactly JugglePAC's
+    "pair the dangling element with the identity" move, except we can skip
+    the +0 entirely in software.
+    """
+    x = jnp.moveaxis(x, axis, 0)
+    n = x.shape[0]
+    if n == 0:
+        raise ValueError("cannot tree-reduce an empty axis")
+    while n > 1:
+        half = n // 2
+        paired = combine(x[0:2 * half:2], x[1:2 * half:2])
+        if n % 2:
+            x = jnp.concatenate([paired, x[n - 1:n]], axis=0)
+        else:
+            x = paired
+        n = paired.shape[0] + (1 if n % 2 else 0)
+    return x[0]
+
+
+def pairwise_tree_sum(x: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Deterministic log-depth pairwise summation (Fig. 2 tree)."""
+    return tree_combine(x, axis, lambda a, b: a + b)
+
+
+def pairwise_tree_sum_pytree(trees, combine=None):
+    """Pairwise-tree reduce a *list of pytrees* (e.g. microbatch gradients)."""
+    combine = combine or (lambda a, b: jax.tree.map(jnp.add, a, b))
+    items = list(trees)
+    if not items:
+        raise ValueError("empty list")
+    while len(items) > 1:
+        nxt = [combine(items[i], items[i + 1])
+               for i in range(0, len(items) - 1, 2)]
+        if len(items) % 2:
+            nxt.append(items[-1])
+        items = nxt
+    return items[0]
+
+
+def tree_depth(n: int) -> int:
+    """Depth of the fixed pairing tree for n leaves = ceil(log2 n).
+
+    The paper's error motivation: serial accumulation has an O(n) worst-case
+    rounding-error growth; the pairing tree's is O(log n)."""
+    d = 0
+    while (1 << d) < n:
+        d += 1
+    return d

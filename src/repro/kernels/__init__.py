@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots, with jnp oracles.
+
+  jugglepac_segsum  segmented streaming sum (the paper's accumulator)
+  intac_accum       exact fixed-point accumulation (carry-save analogue)
+  flash_decode      streaming online-softmax decode attention
+
+Use via ``repro.kernels.ops`` — the wrappers own padding/tiling and select
+interpret mode automatically off-TPU.
+"""
+from . import ops, ref  # noqa: F401
+from .ops import flash_decode, intac_accum, intac_sum_exact, segment_sum  # noqa: F401

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: streaming flash-decode attention (one new token).
+
+This is the JugglePAC pattern applied to the online-softmax accumulator:
+the KV cache is streamed block-by-block through VMEM (blocks = "cycles");
+the running (m, l, acc) triple is the PIS register for the one in-flight
+"set" (the query's attention row), carried in VMEM scratch across grid
+steps; the division by l is the once-per-set finalization.
+
+The cross-*device* half of the decode path (each KV shard producing one
+(m, l, o) partial, combined with a fixed pairwise tree) lives in
+``core.segmented.combine_flash_partials_tree`` — kernel below handles the
+within-shard stream.
+
+Layout: one kernel instance handles one (batch, kv-head) pair:
+  q    (G, d)    G = query heads sharing this KV head (GQA group)
+  k, v (S, d)    the KV cache shard for this head
+  bias (1, S)    additive mask (0 / -inf): padding, sliding-window, etc.
+Grid: (S / Bs,) sequential; scratch m/l (G, 1), acc (G, d) f32.
+
+Wrapper (ops.flash_decode) vmaps over (batch, kv_heads).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, sm_scale: float):
+    step = pl.program_id(0)
+    last = pl.num_programs(0) - 1
+
+    @pl.when(step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)            # (G, d)
+    k = k_ref[...].astype(jnp.float32)            # (Bs, d)
+    v = v_ref[...].astype(jnp.float32)            # (Bs, d)
+    bias = bias_ref[...].astype(jnp.float32)      # (1, Bs)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale + bias
+
+    m_prev = m_ref[...]                           # (G, 1)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)               # rescale old accumulator
+    p = jnp.exp(s - m_new)                        # (G, Bs)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(step == last)
+    def _finalize():
+        o_ref[...] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def flash_decode_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        bias: jnp.ndarray, *, sm_scale: float,
+                        block_kv: int = 512,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q (G, d), k/v (S, d), bias (1, S) -> (G, d) f32.  S % block_kv == 0."""
+    g, d = q.shape
+    s_len = k.shape[0]
+    assert s_len % block_kv == 0, "pad in the wrapper"
+    nb = s_len // block_kv
+    kernel = functools.partial(_flash_decode_kernel, sm_scale=sm_scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((g, d), lambda b: (0, 0)),
+            pl.BlockSpec((block_kv, d), lambda b: (b, 0)),
+            pl.BlockSpec((block_kv, d), lambda b: (b, 0)),
+            pl.BlockSpec((1, block_kv), lambda b: (0, b)),
+        ],
+        out_specs=pl.BlockSpec((g, d), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)

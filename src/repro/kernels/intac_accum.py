@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: INTAC exact fixed-point accumulation.
+
+The carry-save contract on the VPU: each grid step quantizes one (B, D) tile
+to fixed point and adds it into a two-limb int32 accumulator that stays
+resident in VMEM.  Integer adds are exact and associative (the 3:2
+compressor analogue, with the "critical path" now a single VPU int add);
+the limbs are only resolved to a float **after** the kernel — the
+resource-shared final addition, paid once per call instead of per element.
+
+Overflow discipline (documented, checked in the wrapper):
+  |x| * scale < 2^(LIMB_SHIFT + 15)  and  N < 2^(31 - LIMB_SHIFT - 1)
+so each limb accumulates N terms of < 2^15 magnitude -> fits int32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.intac import LIMB_SHIFT
+
+
+def _intac_kernel(scale_ref, vals_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    scale = scale_ref[0, 0]
+    q = jnp.round(vals_ref[...].astype(jnp.float32) * scale)
+    hi = jnp.floor(q * (1.0 / (1 << LIMB_SHIFT)))
+    lo = q - hi * (1 << LIMB_SHIFT)                      # in [0, 2^15)
+    hi_i = jnp.sum(hi.astype(jnp.int32), axis=0)         # exact int adds
+    lo_i = jnp.sum(lo.astype(jnp.int32), axis=0)
+    out_ref[...] += jnp.stack([hi_i, lo_i], axis=0)      # (2, D) int32
+
+
+def intac_accum_pallas(values: jnp.ndarray, scale: jnp.ndarray, *,
+                       block_rows: int = 256,
+                       interpret: bool = False) -> jnp.ndarray:
+    """values (N, D) f32, scale () f32 -> int32 limbs (2, D).
+
+    Resolve with ``core.intac.limb_finalize``-style math:
+    result = (limbs[0] * 2^LIMB_SHIFT + limbs[1]) / scale.
+    """
+    n, d = values.shape
+    assert n % block_rows == 0, "pad in the wrapper"
+    nb = n // block_rows
+    scale2 = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _intac_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b: (0, 0)),
+            pl.BlockSpec((block_rows, d), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, d), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, d), jnp.int32),
+        interpret=interpret,
+    )(scale2, values)

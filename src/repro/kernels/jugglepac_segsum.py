@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: JugglePAC segmented streaming sum.
+
+The circuit's streaming schedule, mapped to the TPU grid:
+
+  * the serial 1-value/cycle input bus  ->  one (B, D) VMEM tile per grid step
+    (TPU grid steps execute sequentially on a core, so the stream order is
+    preserved — "cycles" become grid steps);
+  * FSM state 1 (pair raw inputs)       ->  the intra-tile reduction, expressed
+    as a one-hot matmul so it runs on the MXU: contrib = onehot(ids)^T @ vals;
+  * the PIS register file               ->  the (S, D) f32 accumulator tile that
+    stays resident in VMEM across grid steps (same output block revisited),
+    addressed by segment label exactly like the PIS registers are addressed
+    by set label;
+  * in-order emission                   ->  row s of the output is segment s.
+
+VMEM budget per step: B*D (values) + B (ids) + S*D (accumulator) floats —
+the wrapper (ops.segment_sum) tiles the label space when S*D exceeds the
+budget, the software analogue of "2–8 PIS registers, not a BRAM".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segsum_kernel(ids_ref, vals_ref, out_ref, *, num_segments: int,
+                   seg_offset: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]                      # (B, 1) int32
+    vals = vals_ref[...].astype(jnp.float32)  # (B, D)
+    labels = jax.lax.broadcasted_iota(
+        jnp.int32, (1, num_segments), 1) + seg_offset
+    onehot = (ids == labels).astype(jnp.float32)        # (B, S)
+    # state-1 pairing of the whole tile at once, on the MXU:
+    out_ref[...] += jnp.dot(onehot.T, vals,
+                            preferred_element_type=jnp.float32)
+
+
+def segsum_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                  num_segments: int, *, block_rows: int = 512,
+                  seg_offset: int = 0, interpret: bool = False) -> jnp.ndarray:
+    """values (N, D), segment_ids (N,) int32 -> (num_segments, D) f32.
+
+    N must be a multiple of block_rows (wrapper pads with an out-of-range
+    label, which one-hots to a zero row).
+    """
+    n, d = values.shape
+    assert n % block_rows == 0, "pad in the wrapper"
+    nb = n // block_rows
+    ids2 = segment_ids.reshape(n, 1).astype(jnp.int32)
+    kernel = functools.partial(_segsum_kernel, num_segments=num_segments,
+                               seg_offset=seg_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, 1), lambda b: (b, 0)),
+            pl.BlockSpec((block_rows, d), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, d), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), jnp.float32),
+        interpret=interpret,
+    )(ids2, values)

@@ -1,0 +1,130 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run with ``interpret=True`` — the kernel
+body executes in Python, block by block, which validates the exact TPU
+schedule.  On a real TPU backend the same code lowers to Mosaic.
+
+The wrappers own the padding/tiling contracts so kernel bodies stay minimal:
+  * segment_sum   pads N to the row-block, tiles the label space when the
+                  (S, D) accumulator would not fit the VMEM budget;
+  * intac_accum   pads N, enforces the int32 overflow bound;
+  * flash_decode  pads S to the KV block with -inf bias, vmaps over
+                  (batch, kv_head), broadcasts GQA groups.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_decode as _fd
+from . import intac_accum as _ia
+from . import jugglepac_segsum as _ss
+from .ref import limbs_to_float
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# VMEM budget the segsum accumulator tile may claim (floats).
+_SEGSUM_ACC_BUDGET = 2 * 1024 * 1024  # 8 MiB of f32 out of ~16 MiB VMEM
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block_rows",
+                                             "interpret"))
+def segment_sum(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                num_segments: int, *, block_rows: int = 512,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """JugglePAC segmented sum. values (N, D) or (N,), ids (N,) int32."""
+    interpret = _interpret_default() if interpret is None else interpret
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
+    n, d = values.shape
+    pad = (-n) % block_rows
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        segment_ids = jnp.pad(segment_ids, (0, pad), constant_values=-1)
+
+    # Tile the label space so the accumulator fits the VMEM budget — the
+    # "few PIS registers, not a BRAM" rule.
+    seg_tile = max(1, min(num_segments, _SEGSUM_ACC_BUDGET // max(d, 1)))
+    outs = []
+    for off in range(0, num_segments, seg_tile):
+        s = min(seg_tile, num_segments - off)
+        outs.append(_ss.segsum_pallas(values, segment_ids, s,
+                                      block_rows=block_rows, seg_offset=off,
+                                      interpret=interpret))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def intac_accum(values: jnp.ndarray, scale: jnp.ndarray, *,
+                block_rows: int = 256,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Exact fixed-point accumulation -> int32 limbs (2, D)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n, d = values.shape
+    if n > (1 << 15):
+        raise ValueError("intac_accum: N > 2^15 would risk limb overflow; "
+                         "split the stream and limb_merge the results")
+    pad = (-n) % block_rows
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+    return _ia.intac_accum_pallas(values, scale, block_rows=block_rows,
+                                  interpret=interpret)
+
+
+def intac_sum_exact(values: jnp.ndarray, scale: jnp.ndarray, *,
+                    block_rows: int = 256,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Convenience: exact accumulate + single final resolve -> (D,) f32."""
+    limbs = intac_accum(values, scale, block_rows=block_rows,
+                        interpret=interpret)
+    return limbs_to_float(limbs, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "block_kv",
+                                             "interpret"))
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 kv_len: jnp.ndarray, *, sm_scale: float,
+                 window: Optional[int] = None, block_kv: int = 512,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Batched GQA decode attention for one new token.
+
+    q (B, H, d); k, v (B, S, K, d) with H = K * G; kv_len (B,) valid lengths.
+    ``window``: optional sliding-window size (mixtral-style SWA masking).
+    Returns (B, H, d) f32.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    b, h, d = q.shape
+    s_len, kheads = k.shape[1], k.shape[2]
+    assert h % kheads == 0
+    g = h // kheads
+    pad = (-s_len) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s_len + pad
+
+    pos = jnp.arange(sp)[None, :]                       # (1, S)
+    valid = pos < kv_len[:, None]
+    if window is not None:
+        valid &= pos >= (kv_len[:, None] - window)
+    bias = jnp.where(valid, 0.0, _fd._NEG_INF)[:, None, :]  # (B, 1, S)
+    bias = jnp.broadcast_to(bias, (b, kheads, sp))
+
+    qg = q.reshape(b, kheads, g, d)
+    kk = jnp.moveaxis(k, 2, 1)                          # (B, K, S, d)
+    vv = jnp.moveaxis(v, 2, 1)
+
+    run = functools.partial(_fd.flash_decode_pallas, sm_scale=sm_scale,
+                            block_kv=block_kv, interpret=interpret)
+    out = jax.vmap(jax.vmap(lambda qq, k1, v1, b1: run(qq, k1, v1, b1[None])))(
+        qg, kk, vv, bias)                               # (B, K, G, d)
+    return out.reshape(b, h, d)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.intac import LIMB_SHIFT
+
+
+def segsum_ref(values: jnp.ndarray, segment_ids: jnp.ndarray,
+               num_segments: int, seg_offset: int = 0) -> jnp.ndarray:
+    """Oracle for jugglepac_segsum: scatter-add into [seg_offset, +S)."""
+    ids = segment_ids.astype(jnp.int32) - seg_offset
+    ok = (ids >= 0) & (ids < num_segments)
+    ids = jnp.where(ok, ids, num_segments)      # park invalid rows
+    vals = jnp.where(ok[:, None], values.astype(jnp.float32), 0.0)
+    out = jnp.zeros((num_segments + 1,) + values.shape[1:], jnp.float32)
+    return out.at[ids].add(vals)[:num_segments]
+
+
+def intac_accum_ref(values: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for intac_accum: same quantization, exact int adds via f64-free
+    int32 math (term magnitudes are bounded by the wrapper's contract)."""
+    q = jnp.round(values.astype(jnp.float32) * scale)
+    hi = jnp.floor(q * (1.0 / (1 << LIMB_SHIFT))).astype(jnp.int32)
+    lo = (q - jnp.floor(q * (1.0 / (1 << LIMB_SHIFT)))
+          * (1 << LIMB_SHIFT)).astype(jnp.int32)
+    return jnp.stack([hi.sum(0), lo.sum(0)], axis=0)
+
+
+def limbs_to_float(limbs: jnp.ndarray, scale) -> jnp.ndarray:
+    return (limbs[0].astype(jnp.float32) * (1 << LIMB_SHIFT)
+            + limbs[1].astype(jnp.float32)) / scale
+
+
+def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     bias: jnp.ndarray, *, sm_scale: float) -> jnp.ndarray:
+    """Oracle for flash_decode: materialized softmax attention row."""
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * sm_scale
+    s = s + bias.astype(jnp.float32)             # (G, S)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v.astype(jnp.float32)

@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import pulls in jax: jax
+# locks the device count at first backend initialization.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, without allocating any model memory:
+  * proof the sharding config is coherent (compile succeeds on the
+    production meshes: 16x16 single pod, 2x16x16 multi-pod);
+  * compiled.memory_analysis()  — per-device bytes (fits-in-HBM evidence);
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline;
+  * collective bytes parsed from the post-SPMD HLO text.
+
+XLA counts while-loop (lax.scan) bodies ONCE in cost_analysis, so raw
+numbers undercount scan-over-layers models.  We therefore also lower
+depth-1 and depth-2 variants of each config (same width, 1 and 2 periods)
+and extrapolate linearly: cost(N) = c1 + (N-1) * (c2 - c1).  SSM inner
+scans are removed in the cost variants by setting scan_chunk = seq_len;
+the sLSTM per-timestep scan is corrected analytically (see roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k \
+      --mesh single --out experiments/dryrun
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, shape_applicable
+from repro.distributed import sharding as shd
+from repro.launch import specs as sp
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import decode_step, encode, forward
+from repro.models.config import SHAPES_BY_NAME, ModelConfig, ShapeCfg
+from repro.optim import adamw
+from repro.train.steps import make_prefill_step, make_train_step
+
+# perf-experiment knob (benchmarks/perf_experiments.py variants)
+TRAIN_MICROBATCHES = 1
+
+_COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(\w+\[[^\]]*\](?:,\s*\w+\[[^\]]*\])*)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+          "pred": 1}
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Sum result bytes of collective ops in a post-SPMD HLO module.
+
+    Per-device (the SPMD module is the per-device program).  While bodies
+    appear once — callers correct via depth extrapolation.
+    """
+    out = {k: 0 for k in ("all-reduce", "all-gather", "reduce-scatter",
+                          "all-to-all", "collective-permute")}
+    counts = {k: 0 for k in out}
+    for line in hlo.splitlines():
+        m = re.search(r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start)?\(", line)
+        if not m or "= " not in line:
+            continue
+        kind = m.group(1)
+        lhs = line.split("= ", 1)[0]
+        rhs_type = line.split("= ", 1)[1]
+        shapes = _SHAPE_RE.findall(rhs_type.split("(")[0])
+        if not shapes:
+            shapes = _SHAPE_RE.findall(lhs)
+        nbytes = 0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d.strip():
+                    n *= int(d)
+            nbytes += n * _BYTES.get(dt.split("{")[0], 4)
+        out[kind] += nbytes
+        counts[kind] += 1
+    out["total"] = sum(out.values())
+    out["counts"] = counts
+    return out
+
+
+def _depth_variant(cfg: ModelConfig, n_periods: int,
+                   seq_len: int) -> ModelConfig:
+    changes = dict(n_layers=n_periods * len(cfg.period),
+                   scan_chunk=max(seq_len, 1),
+                   loss_chunk=max(seq_len, 1),
+                   attn_qchunk=max(seq_len, 1))
+    if cfg.is_encdec:
+        changes["encoder_layers"] = n_periods
+    return cfg.scaled(**changes)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeCfg, mesh):
+    """Returns (jitted_fn, abstract_args) for this cell."""
+    plan = shd.mesh_plan(cfg, shape, mesh)
+    dp_t = plan["batch_dp"]
+    cfg = cfg.scaled(act_dp_axes=dp_t or None,
+                     act_sp_axis=plan["act_sp_axis"],
+                     moe_expert_axis=plan["moe_expert_axis"],
+                     moe_ff_axis=plan["moe_ff_axis"])
+    dp = (dp_t if len(dp_t) > 1 else (dp_t[0] if dp_t else None))
+    params_abs = sp.abstract_params(cfg)
+    pspec = shd.param_specs(cfg, params_abs,
+                            replicate_all=plan["replicate_params"])
+    pshard = shd.to_shardings(mesh, pspec)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        batch_abs = sp.train_input_specs(cfg, shape)
+        bspec = shd.batch_specs(cfg, batch_abs, dp)
+        bshard = shd.to_shardings(mesh, bspec)
+        opt_abs = jax.eval_shape(adamw.init, params_abs)
+        ospec = adamw.AdamWState(mu=pspec, nu=pspec, count=P())
+        oshard = shd.to_shardings(mesh, ospec)
+        lr_fn = adamw.cosine_schedule(3e-4, 100, 10000)
+        mb = (TRAIN_MICROBATCHES if TRAIN_MICROBATCHES > 1
+              else plan.get("microbatches", 1))
+        step = make_train_step(cfg, lr_fn=lr_fn, remat=True,
+                               logits_pspec=plan["logits_pspec"],
+                               num_microbatches=mb)
+        fn = jax.jit(step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, rep),
+                     donate_argnums=(0, 1))
+        return fn, (params_abs, opt_abs, batch_abs)
+
+    if shape.kind == "prefill":
+        batch_abs = sp.prefill_input_specs(cfg, shape)
+        bspec = shd.batch_specs(cfg, batch_abs, dp)
+        bshard = shd.to_shardings(mesh, bspec)
+        step = make_prefill_step(cfg)
+        # prefill outputs: (last logits, caches)
+        caches_abs = jax.eval_shape(step, params_abs, batch_abs)[1]
+        seq_axes = ("model",)
+        cspec = shd.cache_specs(cfg, _concretize_cache_tree(caches_abs, cfg),
+                                dp, seq_axes=seq_axes)
+        cshard = shd.to_shardings(mesh, cspec)
+        fn = jax.jit(step, in_shardings=(pshard, bshard),
+                     out_shardings=(rep, cshard))
+        return fn, (params_abs, batch_abs)
+
+    # decode
+    ins = sp.decode_input_specs(cfg, shape)
+    seq_axes = ("model",) if shape.global_batch > 1 else ("data", "model")
+    cspec = shd.cache_specs(cfg, _concretize_cache_tree(ins["caches"], cfg),
+                            dp, seq_axes=seq_axes)
+    cshard = shd.to_shardings(mesh, cspec)
+    tok_shard = NamedSharding(mesh, P(dp, None))
+    pos_shard = rep
+    enc_abs = ins.get("enc_out")
+
+    def dstep(params, token, caches, position, enc_out=None):
+        return decode_step(params, cfg, token, caches, position,
+                           enc_out=enc_out)
+
+    if enc_abs is not None:
+        enc_shard = NamedSharding(mesh, P(dp, None, None))
+        fn = jax.jit(dstep, in_shardings=(pshard, tok_shard, cshard,
+                                          pos_shard, enc_shard),
+                     out_shardings=(rep, cshard), donate_argnums=(2,))
+        return fn, (params_abs, ins["token"], ins["caches"],
+                    ins["position"], enc_abs)
+    fn = jax.jit(dstep, in_shardings=(pshard, tok_shard, cshard, pos_shard),
+                 out_shardings=(rep, cshard), donate_argnums=(2,))
+    return fn, (params_abs, ins["token"], ins["caches"], ins["position"])
+
+
+def _concretize_cache_tree(caches_abs, cfg):
+    """cache_specs dispatches on NamedTuple types, which eval_shape
+    preserves — pass through."""
+    return caches_abs
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             *, with_cost_variants: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "devices": int(mesh.size), "kind": shape.kind}
+    if not shape_applicable(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = "long_500k requires sub-quadratic attention"
+        return rec
+
+    t0 = time.time()
+    plan_mb = shd.mesh_plan(cfg, shape, mesh).get("microbatches", 1)
+    rec["microbatches"] = (TRAIN_MICROBATCHES if TRAIN_MICROBATCHES > 1
+                           else plan_mb)
+    with jax.set_mesh(mesh):
+        fn, args = build_step(cfg, shape, mesh)
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    ca = compiled.cost_analysis() or {}
+    rec["cost_raw"] = {k: float(v) for k, v in ca.items()
+                       if isinstance(v, (int, float)) and
+                       k in ("flops", "bytes accessed")}
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:                                    # CPU backend
+        rec["memory"] = {"error": str(e)[:200]}
+    hlo = compiled.as_text()
+    rec["collectives_raw"] = collective_bytes_from_hlo(hlo)
+    rec["hlo_bytes"] = len(hlo)
+
+    if with_cost_variants:
+        var = {}
+        for nper in (1, 2):
+            vcfg = _depth_variant(cfg, nper, shape.seq_len)
+            with jax.set_mesh(mesh):
+                vfn, vargs = build_step(vcfg, shape, mesh)
+                vcomp = vfn.lower(*vargs).compile()
+            vca = vcomp.cost_analysis() or {}
+            var[nper] = {
+                "flops": float(vca.get("flops", 0.0)),
+                "bytes": float(vca.get("bytes accessed", 0.0)),
+                "collectives": collective_bytes_from_hlo(vcomp.as_text()),
+            }
+        n = cfg.n_periods
+        extr = {}
+        for key in ("flops", "bytes"):
+            c1, c2 = var[1][key], var[2][key]
+            extr[key] = c1 + (n - 1) * (c2 - c1)
+        coll = {}
+        for k in ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute", "total"):
+            c1 = var[1]["collectives"][k]
+            c2 = var[2]["collectives"][k]
+            coll[k] = c1 + (n - 1) * (c2 - c1)
+        extr["collective_bytes"] = coll
+        rec["cost_extrapolated"] = extr
+        rec["cost_variants"] = var
+    rec["status"] = "ok"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-variants", action="store_true",
+                    help="skip the depth-1/2 cost-extrapolation compiles")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = (tuple(SHAPES_BY_NAME) if (args.all or not args.shape)
+              else (args.shape,))
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    n_ok = n_skip = n_fail = 0
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{arch}__{shape_name}__{mesh_name}"
+                path = out / f"{tag}.json"
+                if path.exists():
+                    print(f"[cached ] {tag}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, mesh, mesh_name,
+                                   with_cost_variants=(
+                                       not args.no_variants
+                                       and mesh_name.startswith("single")))
+                    status = rec["status"]
+                    if status == "ok":
+                        n_ok += 1
+                        print(f"[ok {rec['compile_s']:6.1f}s] {tag} "
+                              f"flops={rec['cost_raw'].get('flops', 0):.3g}")
+                    else:
+                        n_skip += 1
+                        print(f"[skip   ] {tag}: {rec.get('reason')}")
+                except Exception as e:
+                    n_fail += 1
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "fail",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[FAIL   ] {tag}: {type(e).__name__}: "
+                          f"{str(e)[:200]}")
+                path.write_text(json.dumps(rec, indent=1))
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch × shape) cell.
+
+Nothing here allocates: the dry-run lowers against these stand-ins.
+Modality frontends are stubs per the assignment — ``[vlm]`` gets precomputed
+patch embeddings + M-RoPE position ids, ``[audio]`` gets precomputed frame
+embeddings for the encoder.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_caches, init_params
+from repro.models.config import ModelConfig, ShapeCfg
+
+# encoder memory length used for enc-dec *decode* shapes (the encoder ran at
+# prefill time; its output length is bounded by the audio segment, not by
+# the decoder's growing sequence).
+ENC_LEN_DECODE = 4096
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_caches(cfg: ModelConfig, bsz: int, max_len: int):
+    return jax.eval_shape(lambda: init_caches(cfg, bsz, max_len))
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    b, s, d = shape.global_batch, shape.seq_len, cfg.d_model
+    batch: Dict[str, Any] = {}
+    if cfg.embed_inputs and not cfg.is_encdec:
+        batch["embeds"] = sds((b, s, d), cfg.dtype)
+        batch["labels"] = sds((b, s), jnp.int32)
+        if cfg.mrope:
+            batch["positions"] = sds((b, s, 3), jnp.int32)
+    else:
+        batch["tokens"] = sds((b, s), jnp.int32)
+    if cfg.is_encdec:
+        batch["enc_embeds"] = sds((b, s, d), cfg.dtype)
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    batch = train_input_specs(cfg, shape)
+    batch.pop("labels", None)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    b = shape.global_batch
+    out: Dict[str, Any] = {
+        "token": sds((b, 1), jnp.int32),
+        "position": sds((), jnp.int32),
+        "caches": abstract_caches(cfg, b, shape.seq_len),
+    }
+    if cfg.is_encdec:
+        out["enc_out"] = sds((b, ENC_LEN_DECODE, cfg.d_model), cfg.dtype)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    if shape.kind == "decode":
+        return decode_input_specs(cfg, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,5 @@
+"""Model zoo: layers, attention, MoE, SSM blocks, and the unified LM."""
+from . import attention, config, layers, model, moe, ssm  # noqa: F401
+from .config import ModelConfig, SHAPES, SHAPES_BY_NAME  # noqa: F401
+from .model import (decode_step, encode, forward, init_caches, init_params,  # noqa: F401
+                    loss_fn, pad_caches_to)

@@ -1,0 +1,323 @@
+"""Attention blocks: GQA (+ sliding window), MLA (DeepSeek-V2), cross-attn.
+
+Three execution modes share one set of weights:
+  * mode="train"/"prefill": full-sequence causal attention (optionally
+    windowed).  Prefill additionally returns the KV cache.
+  * mode="decode": one new token against a cache.  GQA decode can run via
+    the Pallas flash_decode kernel (use_pallas=True) or the jnp reference —
+    identical math; the jnp path is what the multi-pod dry-run lowers (the
+    HLO roofline terms are equivalent).
+
+Caches:
+  * full cache   k,v (B, S, K, hd) + length (B,)
+  * ring cache   k,v (B, W, K, hd) + absolute position — sliding-window
+    (mixtral) long-context decode in O(W) memory: the sub-quadratic path.
+  * MLA latent   c_kv (B, S, r) + k_rope (B, S, rd): decode works entirely
+    in the r-dim latent space (absorbed projections), the paper-exact trick
+    from DeepSeek-V2 — per-token cache is r+rd instead of 2*K*hd.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_mrope, apply_rope, causal_mask, dense, dense_init
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, S, K, hd) — or (B, W, K, hd) ring buffer
+    v: jnp.ndarray
+    length: jnp.ndarray     # (B,) int32 — tokens currently valid
+    # NB: ring (sliding-window) addressing is a *static* property derived
+    # from cfg.window, never stored here — it must not be traced.
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray       # (B, S, r)
+    k_rope: jnp.ndarray     # (B, S, rd)
+    length: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hdim
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], d, h * hd, dtype),
+            "wk": dense_init(ks[1], d, kv * hd, dtype),
+            "wv": dense_init(ks[2], d, kv * hd, dtype),
+            "wo": dense_init(ks[3], h * hd, d, dtype)}
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _rope_or_mrope(x, positions, cfg: ModelConfig):
+    if cfg.mrope:
+        # positions (B, S, 3); hd/2 partitioned per qwen2-vl
+        # ([16,24,24] at hd=128, scaled proportionally otherwise).
+        half = x.shape[-1] // 2
+        s0 = max(1, round(half * 16 / 64))
+        s1 = (half - s0) // 2
+        s2 = half - s0 - s1
+        return apply_mrope(x, positions, cfg.rope_theta, (s0, s1, s2))
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig, sm_scale, *, causal: bool,
+                  qchunk: int):
+    """Memory-bounded causal attention: scan over query blocks, each block
+    attending to full K/V — scores are (B, H, qc, S), never (S, S).
+
+    This is the streaming-accumulation discipline again: the query stream is
+    processed block-by-block against a resident K/V, exactly how the Pallas
+    flash kernel tiles, expressed at the jnp level so it shards under pjit.
+    """
+    b, s, h, hd = q.shape
+    nblk = s // qchunk
+    qb = q.reshape(b, nblk, qchunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def blk_body(i, qblk):
+        # checkpointed so the scan VJP saves only (i, qblk), never the
+        # (B, H, qc, S) score blocks — flash-attention memory discipline
+        if causal:
+            mask = causal_mask(qchunk, s, offset=i * qchunk,
+                               window=cfg.window)
+        else:
+            mask = jnp.zeros((qchunk, s), jnp.float32)
+        return _sdpa(qblk, k, v, mask, sm_scale)
+
+    def blk(carry, args):
+        i, qblk = args
+        return carry, blk_body(i, qblk)
+
+    _, outs = jax.lax.scan(blk, (), (jnp.arange(nblk), qb))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def _sdpa(q, k, v, mask, sm_scale):
+    """q (B,S,H,hd), k/v (B,T,K,hd) grouped; mask (B,1,S,T) or (S,T)."""
+    b, s, h, hd = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, s, kheads, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32) * sm_scale
+    if mask.ndim == 2:
+        mask = mask[None, None, None]
+    else:
+        mask = mask[:, None, :, :][:, :, None]   # (B,1,1,S,T)
+    scores = scores + mask
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, hd)
+
+
+def gqa_apply(params, x, cfg: ModelConfig, *, positions, mode: str = "train",
+              cache: Optional[KVCache] = None,
+              kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              cross: bool = False, causal: bool = True):
+    """Returns (out, new_cache)."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hdim
+    sm_scale = hd ** -0.5
+    is_ring = cfg.window is not None          # static
+
+    q = _split_heads(dense(params["wq"], x), h, hd)
+    if kv_override is not None:                  # cross-attention memory
+        k, v = kv_override
+    else:
+        k = _split_heads(dense(params["wk"], x), kvh, hd)
+        v = _split_heads(dense(params["wv"], x), kvh, hd)
+
+    if not cross:
+        q = _rope_or_mrope(q, positions, cfg)
+        if kv_override is None:
+            k = _rope_or_mrope(k, positions, cfg)
+
+    new_cache = cache
+    if mode in ("train", "prefill"):
+        qchunk = cfg.attn_qchunk
+        if s > qchunk and s % qchunk == 0:
+            out = _sdpa_chunked(q, k, v, cfg, sm_scale,
+                                causal=(causal and not cross), qchunk=qchunk)
+        else:
+            if cross or not causal:
+                t = k.shape[1]
+                mask = jnp.zeros((s, t), jnp.float32)
+            else:
+                mask = causal_mask(s, s, window=cfg.window)
+            out = _sdpa(q, k, v, mask, sm_scale)
+        if mode == "prefill" and not cross:
+            from .layers import shard_hint
+            # cache layout: head_dim on 'model' — matches the natural
+            # projection sharding, so no cross-layout reshard of the cache
+            # (GSPMD's replicate-fallback costs ~17 GB/layer otherwise)
+            k = shard_hint(k, cfg, ("dp", None, None, "model"))
+            v = shard_hint(v, cfg, ("dp", None, None, "model"))
+            if is_ring:
+                # Pack the last W positions into ring order: slot j holds
+                # the latest p <= s-1 with p % W == j.  Slots with p < 0
+                # (when s < W) hold garbage but are masked at decode.
+                w = cfg.window
+                j = jnp.arange(w)
+                p = (s - 1) - ((s - 1 - j) % w)
+                p_safe = jnp.clip(p, 0, s - 1)
+                new_cache = KVCache(k=k[:, p_safe], v=v[:, p_safe],
+                                    length=jnp.full((b,), s, jnp.int32))
+            else:
+                new_cache = KVCache(k=k, v=v,
+                                    length=jnp.full((b,), s, jnp.int32))
+    elif mode == "decode":
+        # Decode batches run in lockstep: a single shared write index
+        # (length[0]) — standard for batched serving; per-request lengths
+        # still drive the masks.
+        assert cache is not None and s == 1
+        length = cache.length                    # (B,) tokens already cached
+        if is_ring:
+            # Ring (sliding-window) cache: slot j holds the latest absolute
+            # position p <= L with p % W == j  =>  p = L - ((L - j) % W).
+            w = cache.k.shape[1]
+            idx = length[0] % w
+            ck = jax.lax.dynamic_update_slice(cache.k, k, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, v, (0, idx, 0, 0))
+            t = w
+            j = jnp.arange(t)[None, :]
+            pos_k = length[:, None] - ((length[:, None] - j) % w)
+            valid = pos_k >= 0
+        else:
+            idx = length[0]
+            ck = jax.lax.dynamic_update_slice(cache.k, k, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, v, (0, idx, 0, 0))
+            t = ck.shape[1]
+            j = jnp.arange(t)[None, :]
+            valid = j <= length[:, None]
+            if cfg.window is not None:
+                valid &= j > (length[:, None] - cfg.window)
+        mask = jnp.where(valid, 0.0, -1e30)[:, None, :]   # (B, S=1, T)
+        out = _sdpa(q, ck, cv, mask, sm_scale)
+        new_cache = KVCache(ck, cv, length + 1)
+    else:
+        raise ValueError(mode)
+
+    out = out.astype(x.dtype).reshape(b, s, h * hd)
+    return dense(params["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    r, nd, rd, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    ks = jax.random.split(key, 6)
+    return {"wq": dense_init(ks[0], d, h * (nd + rd), dtype),
+            "wdkv": dense_init(ks[1], d, r, dtype),
+            "wkr": dense_init(ks[2], d, rd, dtype),
+            "wuk": dense_init(ks[3], r, h * nd, dtype),
+            "wuv": dense_init(ks[4], r, h * vd, dtype),
+            "wo": dense_init(ks[5], h * vd, d, dtype),
+            "c_norm": jnp.ones((r,), dtype)}
+
+
+def mla_apply(params, x, cfg: ModelConfig, *, positions, mode: str = "train",
+              cache: Optional[MLACache] = None):
+    """Returns (out, new_cache). Decode runs fully absorbed in the latent
+    space — the cache stores only (c_kv, k_rope): r+rd floats per token."""
+    from .layers import rmsnorm  # local import to avoid cycle at module load
+
+    b, s, d = x.shape
+    h = cfg.n_heads
+    r, nd, rd, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    sm_scale = (nd + rd) ** -0.5
+
+    q = _split_heads(dense(params["wq"], x), h, nd + rd)   # (B,S,H,nd+rd)
+    qn, qr = q[..., :nd], q[..., nd:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+
+    c = rmsnorm(params["c_norm"], dense(params["wdkv"], x), cfg.norm_eps)
+    kr = dense(params["wkr"], x)[:, :, None, :]             # (B,S,1,rd)
+    kr = apply_rope(kr, positions, cfg.rope_theta)[:, :, 0]  # (B,S,rd)
+
+    if mode in ("train", "prefill"):
+        kn = _split_heads(dense(params["wuk"], c), h, nd)   # (B,S,H,nd)
+        v = _split_heads(dense(params["wuv"], c), h, vd)    # (B,S,H,vd)
+        knf = kn.astype(jnp.float32)
+        krf = kr.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+
+        def block(qn_blk, qr_blk, offset):
+            sc = (jnp.einsum("bshd,bthd->bhst", qn_blk, knf)
+                  + jnp.einsum("bshd,btd->bhst", qr_blk, krf)) * sm_scale
+            sc = sc + causal_mask(qn_blk.shape[1], s, offset=offset)[None, None]
+            p = jax.nn.softmax(sc, axis=-1)
+            return jnp.einsum("bhst,bthd->bshd", p, vf)
+
+        qchunk = cfg.attn_qchunk
+        if s > qchunk and s % qchunk == 0:
+            nblk = s // qchunk
+            qnb = qn.astype(jnp.float32).reshape(
+                b, nblk, qchunk, h, nd).transpose(1, 0, 2, 3, 4)
+            qrb = qr.astype(jnp.float32).reshape(
+                b, nblk, qchunk, h, rd).transpose(1, 0, 2, 3, 4)
+
+            block_ckpt = jax.checkpoint(block)
+
+            def scan_blk(carry, args):
+                i, qnq, qrq = args
+                return carry, block_ckpt(qnq, qrq, i * qchunk)
+
+            _, outs = jax.lax.scan(scan_blk, (),
+                                   (jnp.arange(nblk), qnb, qrb))
+            out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, vd)
+        else:
+            out = block(qn.astype(jnp.float32), qr.astype(jnp.float32), 0)
+        new_cache = cache
+        if mode == "prefill":
+            from .layers import shard_hint
+            c_sh = shard_hint(c, cfg, ("dp", None, "model"))
+            kr_sh = shard_hint(kr, cfg, ("dp", None, None))
+            new_cache = MLACache(c_kv=c_sh, k_rope=kr_sh,
+                                 length=jnp.full((b,), s, jnp.int32))
+    elif mode == "decode":
+        assert cache is not None and s == 1
+        length = cache.length
+        idx = length[0]
+        cc = jax.lax.dynamic_update_slice(cache.c_kv, c, (0, idx, 0))
+        ckr = jax.lax.dynamic_update_slice(cache.k_rope, kr, (0, idx, 0))
+        t = cc.shape[1]
+        # absorb W_uk into the query: q_eff (B,1,H,r)
+        wuk = params["wuk"].reshape(r, h, nd)
+        q_eff = jnp.einsum("bshd,rhd->bshr", qn.astype(jnp.float32),
+                           wuk.astype(jnp.float32))
+        scores = (jnp.einsum("bshr,btr->bhst", q_eff,
+                             cc.astype(jnp.float32))
+                  + jnp.einsum("bshd,btd->bhst", qr.astype(jnp.float32),
+                               ckr.astype(jnp.float32))) * sm_scale
+        valid = jnp.arange(t)[None, :] <= length[:, None]
+        scores = scores + jnp.where(valid, 0.0, -1e30)[:, None, None, :]
+        p = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", p, cc.astype(jnp.float32))
+        wuv = params["wuv"].reshape(r, h, vd)
+        out = jnp.einsum("bshr,rhd->bshd", o_lat, wuv.astype(jnp.float32))
+        new_cache = MLACache(cc, ckr, length + 1)
+    else:
+        raise ValueError(mode)
+
+    out = out.astype(x.dtype).reshape(b, s, h * vd)
+    return dense(params["wo"], out), new_cache

@@ -1,0 +1,216 @@
+"""Mixture-of-Experts: top-k router + capacity-based dispatch (EP-shardable).
+
+Two dispatch strategies, one contract:
+
+  * ``capacity``  — production/dry-run path: tokens are packed into a fixed
+    (E, C) buffer with one-hot dispatch/combine einsums (MaxText-style).
+    Under pjit with the expert axis sharded on 'model', XLA turns the
+    dispatch/combine einsums into all-to-alls — expert parallelism.
+  * ``dense``     — small-scale/oracle path: every expert runs on every token,
+    gated combine.  O(E) compute, exact (no capacity drops); used by smoke
+    tests as the reference for the capacity path.
+
+The **combine** step is a segmented accumulation (each token sums its top-k
+expert contributions — variable "set" sizes once capacity drops happen);
+``combine_segsum`` routes it through the JugglePAC segmented-reduction
+kernel, which is the paper's technique doing real work in the MoE layer.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, MoECfg
+from .layers import dense_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    v = cfg.moe_virtual_split
+    e, f = m.num_experts * v, m.d_ff_expert // v
+    assert m.d_ff_expert % v == 0
+    ks = jax.random.split(key, 5)
+    p = {"router": dense_init(ks[0], d, m.num_experts, jnp.float32),
+         "wi": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                * d ** -0.5).astype(dtype),
+         "wg": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                * d ** -0.5).astype(dtype),
+         "wo": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                * (f * v) ** -0.5).astype(dtype)}
+    if m.num_shared:
+        fs = m.d_ff_shared or m.d_ff_expert
+        from .layers import swiglu_init
+        p["shared"] = swiglu_init(ks[4], d, m.num_shared * fs, dtype)
+    return p
+
+
+def router_topk(router_w, x, m: MoECfg):
+    """Returns (weights (T,k) f32, idx (T,k) i32, aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, m.top_k)
+    if m.router_norm_topk:
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style)
+    e = m.num_experts
+    me = jnp.mean(probs, axis=0)                            # mean router prob
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e), axis=0)     # top-1 load
+    aux = e * jnp.sum(me * ce)
+    return w, idx, aux
+
+
+def _expert_ffn(p, xe):
+    """xe (E, C, D) -> (E, C, D); batched swiglu over the expert axis."""
+    hi = jnp.einsum("ecd,edf->ecf", xe, p["wi"],
+                    preferred_element_type=jnp.float32)
+    hg = jnp.einsum("ecd,edf->ecf", xe, p["wg"],
+                    preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(hg) * hi).astype(xe.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"],
+                      preferred_element_type=jnp.float32).astype(xe.dtype)
+
+
+MOE_GROUP = 4096   # tokens per capacity group (aligns with dp shards)
+
+
+def moe_apply_capacity(params, x, cfg: ModelConfig, *,
+                       capacity: Optional[int] = None,
+                       group_size: int = MOE_GROUP):
+    """x (B, S, D) -> (B, S, D).  Grouped gather/scatter dispatch.
+
+    Tokens are processed in groups of ``group_size`` with a fixed per-group
+    expert capacity Cg = ceil(G*k*cf/E).  Dispatch and combine are pure
+    gathers (batched over the group axis, so the dp sharding of tokens never
+    moves), and the expert FFN is an einsum with the expert axis sharded on
+    'model' — EP without any fake one-hot matmul FLOPs.  The group axis is
+    the JugglePAC "block stream": each group is a block, expert buffers are
+    the label-addressed registers, and capacity drops are the bounded-storage
+    rule made explicit.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    v = cfg.moe_virtual_split
+    e, k = m.num_experts * v, m.top_k * v
+    xt = x.reshape(t, d)
+    w, idx, aux = router_topk(params["router"], xt, m)      # (T,k) f32/i32
+    if v > 1:
+        # each chosen expert expands to its v virtual column shards; the
+        # shards' partial outputs sum in the combine (weights unchanged:
+        # y = sum_v (x @ wi_v) @ wo_v)
+        idx = (idx[:, :, None] * v
+               + jnp.arange(v)[None, None, :]).reshape(t, k)
+        w = jnp.repeat(w, v, axis=1)
+
+    g = min(group_size, t)
+    ng = -(-t // g)
+    padt = ng * g - t
+    if padt:
+        xt = jnp.pad(xt, ((0, padt), (0, 0)))
+        idx = jnp.pad(idx, ((0, padt), (0, 0)), constant_values=0)
+        w = jnp.pad(w, ((0, padt), (0, 0)))                 # zero weight
+    cg = capacity or max(1, int(m.capacity_factor * g * k / e))
+
+    idx_g = idx.reshape(ng, g * k)                          # token-major
+    w_g = w.reshape(ng, g, k)
+
+    # position of each (token, choice) in its expert's per-group buffer
+    onehot = jax.nn.one_hot(idx_g, e, dtype=jnp.int32)      # (nG, G*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.take_along_axis(pos, idx_g[..., None], axis=-1)[..., 0]
+    keep = pos < cg                                         # (nG, G*k)
+
+    # scatter token ids into expert slots: slots (nG, E*Cg [+1 overflow])
+    slot = jnp.where(keep, idx_g * cg + pos, e * cg)
+    tok_in_g = jnp.broadcast_to(
+        (jnp.arange(g)[:, None]).reshape(1, g, 1), (ng, g, k)).reshape(ng, g * k)
+    slots = jnp.full((ng, e * cg + 1), g, jnp.int32)
+    slots = slots.at[jnp.arange(ng)[:, None], slot].set(tok_in_g)
+    slots = slots[:, :e * cg]                               # drop overflow
+
+    # dispatch gather: (nG, G+1, D) -> (nG, E*Cg, D)
+    from .layers import shard_hint
+    xg = shard_hint(xt.reshape(ng, g, d), cfg, ("dp", None, None))
+    xg_pad = jnp.pad(xg, ((0, 0), (0, 1), (0, 0)))          # zero row @ G
+    xe = jnp.take_along_axis(xg_pad, slots[..., None], axis=1)
+    ea, fa = cfg.moe_expert_axis, cfg.moe_ff_axis
+    xe = shard_hint(xe.reshape(ng, e, cg, d), cfg, ("dp", ea, None, None))
+
+    # expert FFN (E sharded on 'model' => expert parallelism)
+    hi = jnp.einsum("gecd,edf->gecf", xe, params["wi"],
+                    preferred_element_type=jnp.float32)
+    hg = jnp.einsum("gecd,edf->gecf", xe, params["wg"],
+                    preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(hg) * hi).astype(xe.dtype)
+    h = shard_hint(h, cfg, ("dp", ea, None, fa))
+    # under expert-TP the contraction over the F-sharded axis emits a
+    # cross-shard all-reduce of the partials; bf16 halves that traffic
+    # (per-shard MXU accumulation remains f32 either way)
+    combine_dtype = (jnp.bfloat16 if (cfg.moe_bf16_combine and fa)
+                     else jnp.float32)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"],
+                    preferred_element_type=combine_dtype).astype(xe.dtype)
+    ye = shard_hint(ye, cfg, ("dp", ea, None, None))
+
+    # combine gather: each (token, choice) reads its slot back
+    ye_flat = ye.reshape(ng, e * cg, d)
+    ye_pad = jnp.pad(ye_flat, ((0, 0), (0, 1), (0, 0)))     # zero row
+    src = jnp.where(keep, idx_g * cg + pos, e * cg)         # (nG, G*k)
+    y_tk = jnp.take_along_axis(ye_pad, src[..., None], axis=1)
+    y_tk = y_tk.reshape(ng, g, k, d)
+    yt = jnp.einsum("ngkd,ngk->ngd", y_tk.astype(jnp.float32),
+                    w_g.astype(jnp.float32)).reshape(ng * g, d)
+    yt = yt[:t].astype(x.dtype)
+
+    if m.num_shared:
+        from .layers import swiglu
+        yt = yt + swiglu(params["shared"], x.reshape(t, d))
+    return yt.reshape(b, s, d), aux
+
+
+def moe_apply_dense(params, x, cfg: ModelConfig):
+    """Exact O(E)-compute reference: every expert sees every token."""
+    m = cfg.moe
+    v = cfg.moe_virtual_split
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    w, idx, aux = router_topk(params["router"], xt, m)
+    e_eff = m.num_experts * v
+    ye = _expert_ffn(params, jnp.broadcast_to(xt, (e_eff,) + xt.shape))
+    if v > 1:   # sum virtual shards back into parent experts
+        ye = ye.reshape(m.num_experts, v, *ye.shape[1:]).sum(1)
+    gates = jnp.zeros((b * s, m.num_experts), jnp.float32).at[
+        jnp.arange(b * s)[:, None], idx].add(w)
+    yt = jnp.einsum("etd,te->td", ye.astype(jnp.float32), gates)
+    if m.num_shared:
+        from .layers import swiglu
+        yt = yt + swiglu(params["shared"], xt).astype(jnp.float32)
+    return yt.astype(x.dtype).reshape(b, s, d), aux
+
+
+def combine_segsum(expert_rows, row_token_ids, num_tokens, *, interpret=None):
+    """Top-k combine as a JugglePAC segmented sum.
+
+    expert_rows (R, D): already gate-weighted expert outputs, one row per
+    (token, choice) pair that survived capacity; row_token_ids (R,): which
+    token each row belongs to.  Variable rows-per-token == the paper's
+    variable-length sets.  Returns (num_tokens, D).
+    """
+    from repro.kernels import ops
+    return ops.segment_sum(expert_rows, row_token_ids, num_tokens,
+                           interpret=interpret)
+
+
+def moe_apply(params, x, cfg: ModelConfig, *, impl: str = "capacity",
+              capacity: Optional[int] = None):
+    if cfg.moe is None:
+        raise ValueError("moe_apply on a non-MoE config")
+    if impl == "capacity":
+        return moe_apply_capacity(params, x, cfg, capacity=capacity)
+    if impl == "dense":
+        return moe_apply_dense(params, x, cfg)
+    raise ValueError(impl)

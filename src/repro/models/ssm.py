@@ -1,0 +1,424 @@
+"""State-space / recurrent blocks: Mamba, mLSTM, sLSTM.
+
+All three are *streaming accumulators* in the JugglePAC sense: a running
+state is updated by a stream of inputs, and fp non-associativity means the
+evaluation order must be fixed.  We use the chunkwise-parallel form
+everywhere it exists (TPU-native: intra-chunk work is matmul-shaped for the
+MXU, inter-chunk state is a short ``lax.scan``), which is exactly the
+state-1 (intra-block pairing) / state-0 (carry combination) split:
+
+  * Mamba   — selective SSM; intra-chunk via ``associative_scan`` (fixed
+              combination tree!), inter-chunk carried state.
+  * mLSTM   — matrix-memory LSTM (xLSTM); chunkwise stabilized parallel form
+              with carried (C, n, m) state.
+  * sLSTM   — scalar-memory LSTM with recurrent connections: inherently
+              sequential (the xLSTM paper says so), so a per-timestep scan.
+
+Each block provides init / train-apply / single-token decode step; decode
+state is O(1) in sequence length — the long_500k path for xLSTM and Jamba.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import MambaCfg, ModelConfig, XLSTMCfg
+from .layers import dense, dense_init
+
+CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray        # (B, di, n)
+    conv: jnp.ndarray     # (B, d_conv-1, di)
+
+
+def mamba_init(key, d_model: int, m: MambaCfg, dtype):
+    di = m.expand * d_model
+    dt_rank = max(1, math.ceil(d_model / 16))
+    ks = jax.random.split(key, 7)
+    a = jnp.tile(jnp.arange(1, m.d_state + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (m.d_conv, di), jnp.float32)
+                   * (1.0 / m.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * m.d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(a),                     # (di, n) f32
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d_model, dtype),
+    }
+
+
+def _mamba_gates(p, xc, m: MambaCfg):
+    """xc (B, L, di) conv'd+silu'd stream -> (dt, bmat, cmat)."""
+    dt_rank = p["dt_proj"].shape[0]
+    proj = dense(p["x_proj"], xc).astype(jnp.float32)
+    dt, b, c = jnp.split(proj, [dt_rank, dt_rank + m.d_state], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("blr,rd->bld", dt, p["dt_proj"]
+                                    .astype(jnp.float32)) + p["dt_bias"])
+    return dt, b, c    # (B,L,di), (B,L,n), (B,L,n)
+
+
+def _mamba_scan_chunk(h0, xin, dt, b, c, a):
+    """One chunk: h0 (B,di,n); xin/dt (B,Q,di); b/c (B,Q,n); a (di,n)."""
+    decay = jnp.exp(dt[..., None] * (-a))                    # (B,Q,di,n)
+    drive = (dt * xin)[..., None] * b[:, :, None, :]         # (B,Q,di,n)
+
+    def combine(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    acum, bcum = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    h = acum * h0[:, None] + bcum                            # (B,Q,di,n)
+    y = jnp.einsum("bqdn,bqn->bqd", h, c)
+    return y, h[:, -1]
+
+
+def mamba_apply(p, x, m: MambaCfg, *, mode: str = "train",
+                state: Optional[MambaState] = None,
+                chunk: int = CHUNK,
+                cfg=None) -> Tuple[jnp.ndarray, Optional[MambaState]]:
+    """x (B, S, d) -> (y (B, S, d), state).
+
+    ``cfg`` (optional ModelConfig) supplies mesh hints: di is TP-sharded on
+    'model' and the chunk-scan inputs must keep (batch, channel) sharding
+    through the reshape/transpose or GSPMD replicates them."""
+    from .layers import shard_hint
+    hint = ((lambda t, dims: shard_hint(t, cfg, dims)) if cfg is not None
+            else (lambda t, dims: t))
+    bsz, s, _ = x.shape
+    di = p["conv_b"].shape[0]
+    dconv = p["conv_w"].shape[0]
+    xz = dense(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                        # (B,S,di)
+
+    if mode in ("train", "prefill"):
+        xi = hint(xi, ("dp", None, "model"))
+        pad = jnp.zeros((bsz, dconv - 1, di), xi.dtype)
+        xpad = jnp.concatenate([pad, xi], axis=1)
+        xc = jax.nn.silu(_depthwise_conv(xpad, p))
+        dt, b, c = _mamba_gates(p, xc.astype(x.dtype), m)
+        dt = hint(dt, ("dp", None, "model"))
+        a = jnp.exp(p["a_log"])
+        nchunks = -(-s // chunk)
+        padlen = nchunks * chunk - s
+        def padq(t):
+            return jnp.pad(t, ((0, 0), (0, padlen)) + ((0, 0),) * (t.ndim - 2))
+        xcp, dtp, bp, cp = map(padq, (xc, dt, b, c))
+        h0 = hint(jnp.zeros((bsz, di, m.d_state), jnp.float32),
+                  ("dp", "model", None))
+
+        chunk_fn = jax.checkpoint(
+            lambda h, xq, dq, bq, cq: _mamba_scan_chunk(h, xq, dq, bq, cq, a))
+
+        def step(h, args):
+            xq, dq, bq, cq = args
+            y, hq = chunk_fn(h, hint(xq, ("dp", None, "model")),
+                             hint(dq, ("dp", None, "model")), bq, cq)
+            return hint(hq, ("dp", "model", None)), y
+
+        resh = lambda t: t.reshape(bsz, nchunks, chunk, t.shape[-1]) \
+                          .transpose(1, 0, 2, 3)
+        hN, ys = jax.lax.scan(step, h0, tuple(map(resh, (xcp, dtp, bp, cp))))
+        y = ys.transpose(1, 0, 2, 3).reshape(bsz, nchunks * chunk, di)[:, :s]
+        y = hint(y, ("dp", None, "model"))
+        y = y + xc * p["d_skip"]
+        out = dense(p["out_proj"],
+                    (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype))
+        new_state = None
+        if mode == "prefill":
+            conv_tail = jnp.concatenate([pad, xi], axis=1)[:, -(dconv - 1):]
+            new_state = MambaState(h=hN, conv=conv_tail)
+        return out, new_state
+
+    assert mode == "decode" and state is not None and s == 1
+    window = jnp.concatenate([state.conv, xi], axis=1)       # (B,dconv,di)
+    xc = (jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32))
+          + p["conv_b"].astype(jnp.float32))
+    xc = jax.nn.silu(xc)[:, None, :]                         # (B,1,di)
+    dt, b, c = _mamba_gates(p, xc.astype(x.dtype), m)
+    a = jnp.exp(p["a_log"])
+    decay = jnp.exp(dt[:, 0, :, None] * (-a))                # (B,di,n)
+    drive = (dt[:, 0] * xc[:, 0])[..., None] * b[:, 0, None, :]
+    h = decay * state.h + drive
+    y = jnp.einsum("bdn,bn->bd", h, c[:, 0]) + xc[:, 0] * p["d_skip"]
+    out = dense(p["out_proj"],
+                (y[:, None] * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype))
+    return out, MambaState(h=h, conv=window[:, 1:])
+
+
+def _depthwise_conv(xpad, p):
+    """Causal depthwise conv: xpad (B, S+K-1, di) -> (B, S, di)."""
+    k = p["conv_w"].shape[0]
+    s = xpad.shape[1] - (k - 1)
+    acc = 0.0
+    for i in range(k):                      # K is 4: unrolled, fusible
+        acc = acc + xpad[:, i:i + s, :].astype(jnp.float32) \
+            * p["conv_w"][i].astype(jnp.float32)
+    return acc + p["conv_b"].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) — chunkwise stabilized parallel form
+# ---------------------------------------------------------------------------
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray      # (B, H, pv, pk)
+    n: jnp.ndarray      # (B, H, pk)
+    m: jnp.ndarray      # (B, H) log stabilizer
+    conv: jnp.ndarray   # (B, kconv-1, di)
+
+
+def mlstm_init(key, d_model: int, x: XLSTMCfg, dtype):
+    di = int(x.proj_factor_m * d_model)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (x.conv_kernel, di), jnp.float32)
+                   * (1.0 / x.conv_kernel)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_if": dense_init(ks[5], di, 2 * x.num_heads, jnp.float32),
+        "b_i": jnp.zeros((x.num_heads,), jnp.float32),
+        "b_f": jnp.full((x.num_heads,), 3.0, jnp.float32),  # open forget gates
+        "out_norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[6], di, d_model, dtype),
+    }
+
+
+def _mlstm_chunk(c0, n0, m0, q, k, v, logi, logf):
+    """One chunk, one head-batch.
+
+    q,k,v (B,H,Q,p); logi/logf (B,H,Q); state c0 (B,H,p,p), n0 (B,H,p),
+    m0 (B,H).  Derivation: with F_t = cumsum(logf), u_s = logi_s - F_s,
+    w_t = max(m0, max_{s<=t} u_s), the stabilized intra weights are
+    A_ts = exp(u_s - w_t) (F_t cancels!) and the carried-state coefficient
+    is exp(m0 - w_t); the chunk-final stabilizer is m_Q = F_Q + w_Q.
+    """
+    p = q.shape[-1]
+    q = q.astype(jnp.float32) * (p ** -0.5)   # 1/sqrt(p) lives on q
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    f_cum = jnp.cumsum(logf, axis=-1)                      # (B,H,Q)
+    u = logi - f_cum                                       # (B,H,Q)
+    b_run = jax.lax.associative_scan(jnp.maximum, u, axis=-1)
+    w = jnp.maximum(m0[..., None], b_run)                  # (B,H,Q)
+
+    mask = jnp.tril(jnp.ones((q.shape[2], q.shape[2]), bool))
+    aw = jnp.exp(u[..., None, :] - w[..., None])           # (B,H,Q_t,Q_s)
+    aw = jnp.where(mask, aw, 0.0)
+    qk = jnp.einsum("bhtp,bhsp->bhts", q, k)
+    scores = qk * aw                                       # (B,H,t,s)
+
+    inter_coef = jnp.exp(m0[..., None] - w)                # (B,H,Q)
+    num = (jnp.einsum("bhts,bhsp->bhtp", scores, v)
+           + inter_coef[..., None]
+           * jnp.einsum("bhtp,bhvp->bhtv", q, c0))
+    den_dot = scores.sum(-1) + inter_coef * jnp.einsum("bhtp,bhp->bht", q, n0)
+    m_t = f_cum + w
+    den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m_t))
+    h = num / den[..., None]
+
+    # end-of-chunk state
+    f_q = f_cum[..., -1]                                   # (B,H)
+    w_q = w[..., -1]
+    m_new = f_q + w_q
+    r = jnp.exp(u + f_q[..., None] - m_new[..., None])     # (B,H,Q)
+    decay = jnp.exp(m0 + f_q - m_new)                      # (B,H)
+    c_new = (decay[..., None, None] * c0
+             + jnp.einsum("bhs,bhsv,bhsp->bhvp", r, v, k))
+    n_new = decay[..., None] * n0 + jnp.einsum("bhs,bhsp->bhp", r, k)
+    return h, c_new, n_new, m_new
+
+
+def mlstm_core(q, k, v, logi, logf, state, chunk: int = CHUNK):
+    """q,k,v (B,H,S,p). Chunk-scan the stabilized parallel form."""
+    bsz, hh, s, p = q.shape
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        padq = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad))
+                                 + ((0, 0),) * (t.ndim - 3))
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                   for t in (q, k, v))
+        logi = jnp.pad(logi, ((0, 0), (0, 0), (0, pad)),
+                       constant_values=-1e30)   # zero input gate on padding
+        logf = jnp.pad(logf, ((0, 0), (0, 0), (0, pad)))
+    c0, n0, m0 = state
+
+    chunk_fn = jax.checkpoint(_mlstm_chunk)
+
+    def step(carry, args):
+        c, n, m = carry
+        qq, kk, vv, li, lf = args
+        h, c, n, m = chunk_fn(c, n, m, qq, kk, vv, li, lf)
+        return (c, n, m), h
+
+    resh = lambda t: t.reshape(bsz, hh, nchunks, chunk, *t.shape[3:]) \
+                      .transpose(2, 0, 1, 3, *range(4, t.ndim + 1))
+    args = tuple(map(resh, (q, k, v, logi, logf)))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), args)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(bsz, hh, nchunks * chunk, p)
+    return h[:, :, :s], (c, n, m)
+
+
+def mlstm_step(q, k, v, logi, logf, state):
+    """Single-token recurrence. q,k,v (B,H,p); logi/logf (B,H)."""
+    c, n, m = state
+    p = q.shape[-1]
+    q = q.astype(jnp.float32) * (p ** -0.5)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, logi)
+    a = jnp.exp(logf + m - m_new)
+    b = jnp.exp(logi - m_new)
+    c_new = a[..., None, None] * c + b[..., None, None] \
+        * jnp.einsum("bhv,bhp->bhvp", v, k)
+    n_new = a[..., None] * n + b[..., None] * k
+    num = jnp.einsum("bhvp,bhp->bhv", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n_new, q)),
+                      jnp.exp(-m_new))
+    return num / den[..., None], (c_new, n_new, m_new)
+
+
+def mlstm_apply(p, x, xc_cfg: XLSTMCfg, *, mode: str = "train",
+                state: Optional[MLSTMState] = None, chunk: int = CHUNK):
+    bsz, s, _ = x.shape
+    di = p["conv_b"].shape[0]
+    nh = xc_cfg.num_heads
+    hd = di // nh
+    kconv = p["conv_w"].shape[0]
+
+    xz = dense(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    if mode in ("train", "prefill"):
+        padc = jnp.zeros((bsz, kconv - 1, di), xi.dtype)
+        xpad = jnp.concatenate([padc, xi], axis=1)
+        xc = jax.nn.silu(_depthwise_conv(
+            xpad, {"conv_w": p["conv_w"], "conv_b": p["conv_b"]}))
+        xc = xc.astype(x.dtype)
+    else:
+        assert state is not None and s == 1
+        window = jnp.concatenate([state.conv, xi], axis=1)
+        xc = jax.nn.silu(
+            jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                       p["conv_w"].astype(jnp.float32))
+            + p["conv_b"].astype(jnp.float32))[:, None].astype(x.dtype)
+
+    tohead = lambda t: t.reshape(bsz, -1, nh, hd).transpose(0, 2, 1, 3)
+    q = tohead(dense(p["wq"], xc))     # model dtype; cast f32 inside chunks
+    k = tohead(dense(p["wk"], xc))
+    v = tohead(dense(p["wv"], xi))
+
+    gates = dense(p["w_if"], xc).astype(jnp.float32)         # (B,S,2H)
+    logi = gates[..., :nh].transpose(0, 2, 1) + p["b_i"][None, :, None]
+    logf = jax.nn.log_sigmoid(
+        gates[..., nh:].transpose(0, 2, 1) + p["b_f"][None, :, None])
+
+    if mode in ("train", "prefill"):
+        c0 = jnp.zeros((bsz, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((bsz, nh, hd), jnp.float32)
+        m0 = jnp.zeros((bsz, nh), jnp.float32)
+        h, (c, n, m) = mlstm_core(q, k, v, logi, logf, (c0, n0, m0), chunk)
+        h = h.transpose(0, 2, 1, 3).reshape(bsz, s, di)
+        new_state = None
+        if mode == "prefill":
+            conv_tail = jnp.concatenate([padc, xi], axis=1)[:, -(kconv - 1):]
+            new_state = MLSTMState(c, n, m, conv_tail)
+    else:
+        h1, (c, n, m) = mlstm_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                   logi[:, :, 0], logf[:, :, 0],
+                                   (state.c, state.n, state.m))
+        h = h1.reshape(bsz, 1, di)
+        new_state = MLSTMState(c, n, m, window[:, 1:])
+
+    from .layers import rmsnorm
+    h = rmsnorm(p["out_norm"], h.astype(x.dtype))
+    out = dense(p["out_proj"],
+                (h.astype(jnp.float32)
+                 * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype))
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, exponential gating, recurrent connections)
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, d)
+    n: jnp.ndarray   # (B, d)
+    h: jnp.ndarray   # (B, d)
+    m: jnp.ndarray   # (B, d)
+
+
+def slstm_init(key, d_model: int, x: XLSTMCfg, dtype):
+    ks = jax.random.split(key, 4)
+    dff = int(x.proj_factor_s * d_model)
+    return {
+        "w_x": dense_init(ks[0], d_model, 4 * d_model, dtype),
+        "w_h": dense_init(ks[1], d_model, 4 * d_model, dtype),
+        "bias": jnp.zeros((4 * d_model,), jnp.float32),
+        "ff_wi": dense_init(ks[2], d_model, dff, dtype),
+        "ff_wo": dense_init(ks[3], dff, d_model, dtype),
+    }
+
+
+def slstm_cell(p, xt, st: SLSTMState) -> Tuple[jnp.ndarray, SLSTMState]:
+    """xt (B, 4d) pre-projected input contribution."""
+    d = st.c.shape[-1]
+    g = xt + dense(p["w_h"], st.h).astype(jnp.float32) + p["bias"]
+    zi, ii, ff, oo = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    zt = jnp.tanh(zi)
+    logi = ii
+    logf = jax.nn.log_sigmoid(ff)
+    m_new = jnp.maximum(logf + st.m, logi)
+    a = jnp.exp(logf + st.m - m_new)
+    b = jnp.exp(logi - m_new)
+    c_new = a * st.c + b * zt
+    n_new = jnp.maximum(a * st.n + b, jnp.exp(-m_new))
+    h_new = jax.nn.sigmoid(oo) * (c_new / n_new)
+    return h_new, SLSTMState(c_new, n_new, h_new.astype(st.h.dtype), m_new)
+
+
+def slstm_apply(p, x, xc_cfg: XLSTMCfg, *, mode: str = "train",
+                state: Optional[SLSTMState] = None):
+    bsz, s, d = x.shape
+    xg = dense(p["w_x"], x).astype(jnp.float32)              # (B,S,4d)
+    if state is None:
+        z = jnp.zeros((bsz, d), jnp.float32)
+        state = SLSTMState(z, jnp.ones_like(z), z.astype(x.dtype), z)
+
+    if mode in ("train", "prefill"):
+        cell = jax.checkpoint(lambda st, xt: slstm_cell(p, xt, st))
+
+        def step(st, xt):
+            h, st2 = cell(st, xt)
+            return st2, h
+        stN, hs = jax.lax.scan(step, state, xg.transpose(1, 0, 2))
+        h = hs.transpose(1, 0, 2).astype(x.dtype)
+        new_state = stN if mode == "prefill" else None
+    else:
+        assert s == 1
+        h1, new_state = slstm_cell(p, xg[:, 0], state)
+        h = h1[:, None].astype(x.dtype)
+
+    ff = dense(p["ff_wo"], jax.nn.gelu(
+        dense(p["ff_wi"], h).astype(jnp.float32)).astype(x.dtype))
+    return h + ff, new_state

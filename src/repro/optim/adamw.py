@@ -1,0 +1,90 @@
+"""AdamW + schedules, built here (no optax dependency).
+
+Optimizer state is a pytree congruent with params, so the FSDP/TP parameter
+shardings apply verbatim to the moments.  Gradient clipping uses the fixed
+pairing-tree global-norm reduction (deterministic across layouts) and the
+moments are kept in f32 regardless of param dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trees import pairwise_tree_sum
+
+
+class AdamWState(NamedTuple):
+    mu: object           # pytree, f32
+    nu: object           # pytree, f32
+    count: jnp.ndarray   # scalar int32
+
+
+def init(params) -> AdamWState:
+    f32zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(mu=jax.tree.map(f32zeros, params),
+                      nu=jax.tree.map(f32zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    """Deterministic global norm: per-leaf sum-of-squares combined with a
+    fixed pairing tree (leaf order is canonical tree order)."""
+    sq = [jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree)]
+    if not sq:
+        return jnp.float32(0.0)
+    return jnp.sqrt(pairwise_tree_sum(jnp.stack(sq), axis=0))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), grads), g
+
+
+def update(grads, state: AdamWState, params, *, lr, b1: float = 0.9,
+           b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+           clip_norm: Optional[float] = 1.0):
+    """Returns (new_params, new_state, grad_norm)."""
+    gnorm = jnp.float32(0.0)
+    if clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        step = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * step
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(new_m, new_v, count), gnorm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return lr

@@ -1,0 +1,103 @@
+"""Batched serving engine: continuous prefill + decode with a KV cache pool.
+
+A deliberately small but real engine:
+  * requests (prompt token lists) are batched up to ``max_batch``;
+  * one shared prefill (padded to the longest prompt in the batch, left
+    padding via per-request lengths) builds the caches;
+  * lock-step decode with per-request stopping (eos or max_new_tokens);
+  * greedy or temperature sampling with a seeded key per request.
+
+The decode step is the same function the multi-pod dry-run lowers — on a
+real pod it runs sharded; here it runs on CPU for the examples/tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (decode_step, encode, forward, init_caches,
+                          pad_caches_to)
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: Sequence[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Result:
+    tokens: List[int]
+    prompt_len: int
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: decode_step(p, cfg, t, c, pos,
+                                             moe_impl="dense"))
+
+    def _prefill(self, tokens: jnp.ndarray):
+        logits, caches, _ = forward(self.params, self.cfg, tokens=tokens,
+                                    mode="prefill", moe_impl="dense")
+        return logits[:, -1:], pad_caches_to(self.cfg, caches, self.max_len)
+
+    def generate(self, requests: List[Request]) -> List[Result]:
+        cfg = self.cfg
+        bsz = len(requests)
+        plens = [len(r.prompt) for r in requests]
+        pmax = max(plens)
+        # right-align prompts (left padding) so position pmax-1 is the last
+        # prompt token for every request
+        toks = np.zeros((bsz, pmax), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, pmax - plens[i]:] = np.asarray(r.prompt, np.int32)
+        logits, caches = self._prefill(jnp.asarray(toks))
+
+        out = [list(r.prompt) for r in requests]
+        done = np.zeros(bsz, bool)
+        max_new = max(r.max_new_tokens for r in requests)
+        position = pmax
+        cur = self._sample(logits, requests)
+        for i in range(bsz):
+            out[i].append(int(cur[i, 0]))
+
+        for step in range(1, max_new):
+            if bool(done.all()) or position >= self.max_len - 1:
+                break
+            logits, caches = self._decode(self.params, cur, caches,
+                                          jnp.int32(position))
+            cur = self._sample(logits, requests)
+            position += 1
+            for i, r in enumerate(requests):
+                if done[i]:
+                    continue
+                t = int(cur[i, 0])
+                out[i].append(t)
+                if (r.eos_id is not None and t == r.eos_id) or \
+                        len(out[i]) - plens[i] >= r.max_new_tokens:
+                    done[i] = True
+
+        return [Result(tokens=o, prompt_len=p) for o, p in zip(out, plens)]
+
+    def _sample(self, logits, requests) -> jnp.ndarray:
+        self.key, sub = jax.random.split(self.key)
+        temps = jnp.asarray([[max(r.temperature, 0.0)] for r in requests])
+        greedy = jnp.argmax(logits[:, -1, :self.cfg.vocab], axis=-1)
+        scaled = logits[:, -1, :self.cfg.vocab] / jnp.maximum(temps, 1e-6)
+        sampled = jax.random.categorical(sub, scaled, axis=-1)
+        tok = jnp.where(temps[:, 0] > 0, sampled, greedy)
+        return tok[:, None].astype(jnp.int32)

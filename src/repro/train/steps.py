@@ -1,0 +1,94 @@
+"""Train / prefill / decode step builders.
+
+``make_train_step`` builds the canonical production step: forward + backward
+(+ remat), gradient clip, AdamW.  Under pjit the data-parallel gradient
+reduction is emitted by XLA from the shardings; ``make_shardmap_train_step``
+(distributed/collectives.py) is the explicit-collective variant with the
+INTAC compressed all-reduce and the gradient juggler — the paper's technique
+on the distributed-optimization path.
+
+``make_decode_step`` / ``make_prefill_step`` are the serving pair.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step as model_decode_step
+from repro.models import encode, forward, loss_fn
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, *, lr_fn: Callable,
+                    moe_impl: str = "capacity", remat: bool = True,
+                    clip_norm: float = 1.0, weight_decay: float = 0.1,
+                    logits_pspec=None, num_microbatches: int = 1):
+    """num_microbatches > 1: the batch splits along dim 0 and gradients
+    accumulate through the JugglePAC binary-counter pairing tree
+    (core.juggler) — activation memory scales down by the microbatch count
+    while only O(log m) gradient copies stay live, and the fixed pairing
+    schedule keeps the result independent of the grouping."""
+    from repro.core import juggler
+
+    def grad_fn(p, b):
+        def loss_wrap(pp):
+            return loss_fn(pp, cfg, b, moe_impl=moe_impl, remat=remat,
+                           logits_pspec=logits_pspec)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_wrap, has_aux=True)(p)
+        return grads, (loss, metrics)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape(
+                    (num_microbatches, x.shape[0] // num_microbatches)
+                    + x.shape[1:]), batch)
+            grads, (losses, metricses) = juggler.accumulate_microbatch_grads(
+                grad_fn, params, mbs, num_microbatches=num_microbatches,
+                mean=True)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricses)
+        else:
+            grads, (loss, metrics) = grad_fn(params, batch)
+        lr = lr_fn(opt_state.count + 1)   # count is 0-based
+        params, opt_state, gnorm = adamw.update(
+            grads, opt_state, params, lr=lr, clip_norm=clip_norm,
+            weight_decay=weight_decay)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *, moe_impl: str = "capacity"):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, cfg, batch, moe_impl=moe_impl,
+                                remat=False)
+        return dict(metrics, loss=loss)
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, moe_impl: str = "capacity"):
+    def prefill_step(params, batch):
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = encode(params, cfg, batch["enc_embeds"])
+        logits, caches, _ = forward(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), positions=batch.get("positions"),
+            mode="prefill", enc_out=enc_out, moe_impl=moe_impl)
+        # next-token distribution of the last position only
+        return logits[:, -1:], caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, moe_impl: str = "capacity"):
+    def dstep(params, token, caches, position, enc_out=None):
+        return model_decode_step(params, cfg, token, caches, position,
+                                 enc_out=enc_out, moe_impl=moe_impl)
+    return dstep

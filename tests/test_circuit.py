@@ -1,0 +1,163 @@
+"""Paper-claim validation: the cycle-accurate JugglePAC / INTAC simulators.
+
+These tests pin the faithful-reproduction layer to the paper's own claims:
+Table I (schedule), Table II (min set size vs PIS registers), §III-A
+(in-order results, single adder, 4-slot FIFO, L+3 timeout), §III-B (INTAC
+exactness, resource-shared final adder), Eq. 1 (INTAC latency).
+"""
+
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.circuit import (INTAC, JugglePAC, PipelinedAdder,
+                                jugglepac_min_set_size)
+from repro.core import circuit_jax
+
+
+def test_pipelined_adder_latency():
+    add = PipelinedAdder(5)
+    outs = []
+    for cyc in range(12):
+        issue = (1.0, 2.0, 7) if cyc == 0 else None
+        outs.append(add.tick(issue))
+    # result appears exactly L cycles after issue
+    assert outs[:5] == [None] * 5
+    assert outs[5] == (3.0, 7)
+    assert all(o is None for o in outs[6:])
+
+
+def test_table1_schedule_shape():
+    """The Fig.2/Table I discipline at L=2: raw pairs are issued on the
+    cycle the 2nd element arrives; odd leftovers pair with 0 on the next
+    start; FIFO pairs fill free slots; results are correct and in order."""
+    pac = JugglePAC(adder_latency=2, num_registers=4)
+    sets = [[1, 2, 3, 4, 5], [10, 20, 30, 40],
+            [100, 200, 300, 400, 500, 600, 700, 800, 900]]
+    res = pac.run(sets)
+    assert [r.set_index for r in res] == [0, 1, 2]          # input order
+    for r, s in zip(res, sets):
+        assert r.value == sum(s)
+    # a4 paired with zero exactly when b starts (cycle 5)
+    zero_pairs = [(c, a, b) for c, a, b, l in pac.adder_issue_log if b == 0.0]
+    assert zero_pairs and zero_pairs[0][0] == 5 and zero_pairs[0][1] == 5
+    # single adder: at most one issue per cycle
+    cycles = [c for c, *_ in pac.adder_issue_log]
+    assert len(cycles) == len(set(cycles))
+    assert pac.fifo_overflows == 0
+
+
+def test_throughput_back_to_back():
+    """Full throughput: back-to-back sets with no stalls (the paper's core
+    claim vs [3], [4]) — inputs are consumed every cycle, results emitted."""
+    sizes = [40, 33, 50, 29, 64, 41]
+    sets = [[float(i * 100 + j) for j in range(n)]
+            for i, n in enumerate(sizes)]
+    pac = JugglePAC(adder_latency=14, num_registers=4)
+    res = pac.run(sets)
+    assert len(res) == len(sets)
+    assert [r.set_index for r in res] == list(range(len(sets)))
+    for r, s in zip(res, sets):
+        assert abs(r.value - sum(s)) < 1e-6 * max(1.0, abs(sum(s)))
+
+
+def test_latency_bound_table2():
+    """Latency <= DS + c with a small constant at L=14 (Table II reports
+    c <= 113; our scheduler's measured c is checked to be <= 113 too)."""
+    worst_c = 0
+    for n in (30, 64, 128, 200):
+        sets = [[1.0] * n for _ in range(6)]
+        pac = JugglePAC(adder_latency=14, num_registers=4)
+        res = pac.run(sets)
+        for r in res:
+            worst_c = max(worst_c, r.latency - n)
+    assert worst_c <= 113, worst_c
+
+
+@pytest.mark.parametrize("regs,paper_min", [(2, 94), (4, 29), (8, 18)])
+def test_min_set_size_table2(regs, paper_min):
+    """Table II trend: min set size falls steeply with PIS registers.
+    Our scheduler is a mild idealization (no routing-delay cycles), so we
+    assert ours <= paper's number and within the same regime (> 1/4 of it),
+    and record both in EXPERIMENTS.md §Paper-validation."""
+    m = jugglepac_min_set_size(14, regs)
+    assert m <= paper_min
+    assert m >= max(2, paper_min // 4)
+
+
+def test_below_min_set_size_fails():
+    """The design restriction (§IV-A): sets far below the minimum mix data
+    between sets — the failure mode the paper documents."""
+    pac = JugglePAC(adder_latency=14, num_registers=2)
+    sets = [[1.0] * 5 for _ in range(20)]          # 5 << 94
+    res = pac.run(sets)
+    ok = (len(res) == len(sets)
+          and all(abs(r.value - 5.0) < 1e-9 for r in res)
+          and [r.set_index for r in res] == list(range(20)))
+    assert not ok
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=30, max_value=70), min_size=2,
+                max_size=5),
+       st.integers(min_value=2, max_value=20))
+def test_jax_scan_matches_python_sim(sizes, latency):
+    rng = random.Random(7)
+    sets = [[float(rng.randrange(1, 50)) for _ in range(n)] for n in sizes]
+    pac = JugglePAC(latency, 4)
+    py = [(r.set_index, r.value, r.cycle) for r in pac.run(sets)]
+    jx, ovf = circuit_jax.run_sets(sets, latency=latency, num_registers=4)
+    assert not ovf
+    assert len(py) == len(jx)
+    for (si, v, c), (si2, v2, c2) in zip(py, jx):
+        assert si == si2 and c == c2 and abs(v - v2) < 1e-3
+
+
+def test_reduction_operator_generality():
+    """§III-A: 'any multi-cycle operator' — run with multiplication."""
+    pac = JugglePAC(adder_latency=6, num_registers=4,
+                    op=lambda a, b: a * b, zero=1.0)
+    sets = [[1.5, 2.0, 3.0] + [1.0] * 40, [2.0] * 35]
+    res = pac.run(sets)
+    assert abs(res[0].value - 9.0) < 1e-6
+    assert abs(res[1].value - 2.0 ** 35) < 1e-3 * 2.0 ** 35
+
+
+# ---------------------------------------------------------------------------
+# INTAC
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=2 ** 64 - 1),
+                min_size=1, max_size=200),
+       st.sampled_from([1, 2, 4, 16]),
+       st.sampled_from([1, 2]))
+def test_intac_exact(values, fa_cells, inputs_per_cycle):
+    it = INTAC(64, 128, inputs_per_cycle, fa_cells)
+    res = it.accumulate(values)
+    assert res.value == sum(values) % (1 << 128)
+
+
+def test_intac_latency_eq1():
+    """Eq. 1: Latency = ceil(I/N) + ceil((M-R)/FAs) + 1."""
+    for n_in, fas, count in [(1, 1, 64), (1, 16, 100), (2, 2, 64)]:
+        it = INTAC(64, 128, n_in, fas)
+        res = it.accumulate(list(range(count)))
+        assert res.cycle == INTAC.latency_eq1(count, n_in, 128, fas)
+
+
+def test_intac_min_set_size_rule():
+    """§IV-C: min set = ceil(M*inputs/FAs)."""
+    assert INTAC(64, 128, 1, 1).min_set_size() == 128
+    assert INTAC(64, 128, 2, 16).min_set_size() == 16
+
+
+def test_intac_table5_latency_trend():
+    """Table V: more FA cells => lower latency (N+128 / N+64 / N+8)."""
+    lat = {fas: INTAC.latency_eq1(1000, 1, 128, fas) - 1000
+           for fas in (1, 2, 16)}
+    assert lat[1] > lat[2] > lat[16]
+    assert lat[1] == 129 and lat[2] == 65 and lat[16] == 9
