@@ -14,9 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.core.circuit import INTAC, JugglePAC, jugglepac_min_set_size
 from repro.core.segmented import segment_sum_ref, segments_from_lengths
-from repro.kernels import ops
 
 
 def _time(fn, *args, reps=5, **kw):
@@ -82,7 +82,8 @@ def table3_accumulator_comparison(rows):
                  f"stalling serial accumulator "
                  f"({serial_cycles / pac_cycles:.1f}x slower)"))
 
-    # production layer: variable-length segmented sum, three impls
+    # production layer: variable-length segmented sum through the
+    # repro.reduce front door, scatter oracle vs registered backends
     rng = np.random.RandomState(0)
     lens = rng.randint(64, 256, size=64)
     total = int(lens.sum())
@@ -91,12 +92,17 @@ def table3_accumulator_comparison(rows):
 
     ref = jax.jit(lambda v, i: segment_sum_ref(v, i, 64))
     us_ref = _time(ref, vals, ids)
-    us_kernel = _time(lambda v, i: ops.segment_sum(v, i, 64), vals, ids)
+    us_blocked = _time(lambda v, i: repro.reduce(
+        v, segment_ids=i, num_segments=64, backend="blocked"), vals, ids)
+    us_kernel = _time(lambda v, i: repro.reduce(
+        v, segment_ids=i, num_segments=64, backend="pallas"), vals, ids)
     rows.append(("table3_segsum_scatter_ref_us", us_ref,
                  f"{total} rows x 128, 64 segments"))
+    rows.append(("table3_segsum_blocked_us", us_blocked,
+                 "repro.reduce backend=blocked (lax.scan schedule)"))
     rows.append(("table3_segsum_jugglepac_kernel_us", us_kernel,
-                 "pallas interpret on CPU (TPU schedule validation, "
-                 "not a wall-clock claim)"))
+                 "repro.reduce backend=pallas, interpret on CPU (TPU "
+                 "schedule validation, not a wall-clock claim)"))
 
 
 def table5_intac(rows):
@@ -133,13 +139,37 @@ def table5_intac(rows):
                  f"pairwise_tree_err={err_pairwise:.3e} "
                  "(integer accumulation: exact, one final rounding)"))
 
-    # determinism under permutation (the non-associativity problem)
-    from repro.core.intac import intac_sum
+    # determinism under permutation (the non-associativity problem),
+    # via the front door's exact policy
     perm = rng.permutation(len(x))
-    det = float(intac_sum(jnp.asarray(x))) == \
-        float(intac_sum(jnp.asarray(x[perm])))
+    det = float(repro.reduce(jnp.asarray(x), policy="exact")) == \
+        float(repro.reduce(jnp.asarray(x[perm]), policy="exact"))
     acc2 = np.float32(0.0)
     for v in x[perm]:
         acc2 = np.float32(acc2 + v)
     rows.append(("table5_intac_permutation_invariant", int(det),
                  f"fp32_serial_changes_by={abs(float(acc2 - acc)):.3e}"))
+
+
+def table6_reduce_policies(rows):
+    """repro.reduce accuracy/latency sweep: the policy knob quantified.
+
+    One ill-conditioned segmented stream, every accuracy policy on the
+    jit-friendly blocked backend: abs error vs f64 and host wall time.
+    """
+    rng = np.random.RandomState(7)
+    n, d, s = 1 << 14, 64, 32
+    x = (rng.randn(n, d) * 10 ** rng.uniform(-3, 3, (n, 1))) \
+        .astype(np.float32)
+    ids = np.sort(rng.randint(0, s, n))
+    exact64 = np.zeros((s, d))
+    np.add.at(exact64, ids, x.astype(np.float64))
+    vals, jids = jnp.asarray(x), jnp.asarray(ids)
+    for pol in ("fast", "compensated", "exact"):
+        fn = jax.jit(lambda v, i, p=pol: repro.reduce(
+            v, segment_ids=i, num_segments=s, policy=p, backend="blocked"))
+        us = _time(fn, vals, jids)
+        err = float(np.abs(np.asarray(fn(vals, jids)) - exact64).max())
+        rows.append((f"table6_reduce_{pol}_us", us,
+                     f"max_abs_err_vs_f64={err:.3e} "
+                     f"({n}x{d} rows, {s} segments, blocked backend)"))

@@ -28,6 +28,7 @@ def main(argv=None) -> None:
     paper_tables.table2_pis_registers(rows)
     paper_tables.table3_accumulator_comparison(rows)
     paper_tables.table5_intac(rows)
+    paper_tables.table6_reduce_policies(rows)
 
     print("name,value,derived")
     for name, val, derived in rows:

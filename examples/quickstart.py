@@ -3,8 +3,9 @@
   1. instantiate a reduced llama-family config;
   2. train it for 20 steps on the synthetic stream (loss drops);
   3. generate from it with the batched serving engine;
-  4. demo the paper's primitives: JugglePAC cycle-accurate schedule,
-     the segmented-reduction kernel, INTAC deterministic summation.
+  4. demo the paper's primitives through the ``repro.reduce`` front door:
+     JugglePAC cycle-accurate schedule, segmented reduction across
+     backends, INTAC-exact deterministic summation as a policy.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,11 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.configs import get_smoke_config
 from repro.core.circuit import JugglePAC
-from repro.core.intac import intac_sum
 from repro.data.pipeline import DataCfg, SyntheticLM
-from repro.kernels import ops
 from repro.models import init_params
 from repro.optim import adamw
 from repro.serve.engine import Engine, Request
@@ -46,9 +46,10 @@ def main():
                            Request(prompt=[42, 1], max_new_tokens=8,
                                    temperature=0.7)])
     for i, r in enumerate(res):
-        print(f"generated[{i}]: {r.tokens[r.prompt_len:]}")
+        print(f"generated[{i}]: {r.tokens[r.prompt_len:]} "
+              f"mean_logprob={r.mean_logprob:.3f}")
 
-    # --- 4: the paper's primitives -----------------------------------------
+    # --- 4: the paper's primitives, via the repro.reduce front door --------
     pac = JugglePAC(adder_latency=14, num_registers=4)
     sets = [[float(j) for j in range(n)] for n in (40, 35, 50)]
     results = pac.run(sets)
@@ -57,12 +58,17 @@ def main():
 
     vals = jnp.asarray(np.random.randn(512, 64).astype(np.float32))
     ids = jnp.sort(jnp.asarray(np.random.randint(0, 9, 512)))
-    seg = ops.segment_sum(vals, ids, 9)
-    print("segmented sum (9 variable-length sets):", seg.shape)
+    seg = repro.reduce(vals, segment_ids=ids, num_segments=9)
+    seg_k = repro.reduce(vals, segment_ids=ids, num_segments=9,
+                         backend="pallas")
+    print("segmented sum (9 variable-length sets):", seg.shape,
+          "| auto == pallas kernel bitwise:",
+          bool(jnp.array_equal(seg, seg_k)))
 
     x = jnp.asarray(np.random.randn(1000).astype(np.float32))
-    print("INTAC deterministic sum:", float(intac_sum(x)),
-          "== reversed:", float(intac_sum(x[::-1])))
+    fwd = float(repro.reduce(x, policy="exact"))
+    rev = float(repro.reduce(x[::-1], policy="exact"))
+    print("exact-policy deterministic sum:", fwd, "== reversed:", rev)
 
 
 if __name__ == "__main__":

@@ -19,11 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.core.circuit import INTAC, JugglePAC
-from repro.core.intac import compressed_psum_mean  # noqa: F401  (shard_map demo in tests)
-from repro.core.intac import intac_sum
 from repro.core.segmented import segments_from_lengths
-from repro.kernels import ops
 
 
 def main():
@@ -52,22 +50,29 @@ def main():
         print(f"  FAs={fas:2d}: exact={ok} latency={r.cycle} "
               f"(Eq.1: {INTAC.latency_eq1(len(vals), 1, 128, fas)})")
 
-    # --- 3: production mirror -------------------------------------------------
-    print("=== production: segmented reduce + deterministic sum ===")
+    # --- 3: production mirror, via the repro.reduce front door ---------------
+    print("=== production: repro.reduce — one call, policy x backend ===")
     lens = jnp.asarray([100, 1, 399, 250, 274])   # variable-length sets
     total = int(lens.sum())
     vals = jnp.asarray(np.random.default_rng(1)
                        .normal(size=(total, 128)).astype(np.float32))
     ids = segments_from_lengths(lens, total)
-    out = ops.segment_sum(vals, ids, 5)
     ref = jnp.zeros((5, 128)).at[ids].add(vals)
-    print(f"  jugglepac_segsum vs scatter ref: "
-          f"max|diff| = {float(jnp.abs(out - ref).max()):.2e}")
+    outs = {b: repro.reduce(vals, segment_ids=ids, num_segments=5, backend=b)
+            for b in ("ref", "blocked", "pallas")}
+    bitwise = all(bool(jnp.array_equal(outs["ref"], o))
+                  for o in outs.values())
+    print(f"  segmented sum, 3 backends bitwise-identical: {bitwise}; "
+          f"vs scatter oracle max|diff| = "
+          f"{float(jnp.abs(outs['blocked'] - ref).max()):.2e}")
 
     x = jnp.asarray(np.random.default_rng(2)
                     .normal(size=100000).astype(np.float32))
-    a, b = float(intac_sum(x)), float(intac_sum(x[::-1]))
-    print(f"  intac_sum: {a} (reversed: {b}) bitwise equal: {a == b}")
+    for pol in ("fast", "compensated", "exact"):
+        a = float(repro.reduce(x, policy=pol))
+        b = float(repro.reduce(x[::-1], policy=pol))
+        print(f"  policy={pol:12s} sum={a:.6f} reversed={b:.6f} "
+              f"bitwise equal: {a == b}")
     s1 = float(jnp.sum(x))
     print(f"  jnp.sum for reference: {s1} (order-dependent in general)")
 

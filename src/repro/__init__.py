@@ -1,5 +1,18 @@
 """repro — JugglePAC/INTAC (pipelined accumulation) as a TPU-native
 streaming-reduction framework: faithful cycle-accurate reproduction plus a
-multi-pod JAX training/inference stack built on the technique."""
+multi-pod JAX training/inference stack built on the technique.
 
-__version__ = "1.0.0"
+The front door for every reduction is ``repro.reduce``:
+
+    from repro import reduce
+    out = reduce(values, segment_ids=ids, num_segments=8,
+                 op="mean", policy="exact")     # or call repro.reduce(...)
+
+with accuracy policies (fast / compensated / exact), registered backends
+(ref / blocked / pallas), the streaming ``Accumulator`` protocol, and the
+policy-selectable cross-device ``collective_mean``.
+"""
+
+from . import reduce  # noqa: F401  (callable module: repro.reduce(...))
+
+__version__ = "1.1.0"

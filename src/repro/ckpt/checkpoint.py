@@ -15,8 +15,9 @@ Design for the fault-tolerance story (multi-thousand-node deployments):
                  mesh (elastic scaling) is a re-shard, not a re-format;
   * retention:   keep the newest ``keep`` checkpoints, delete older ones.
 
-Format: msgpack map {path: {dtype, shape, raw(zstd)}} + a small json
-manifest.  No orbax dependency — this is the substrate, built here.
+Format: msgpack map {path: {dtype, shape, raw(zstd, or zlib when
+zstandard is unavailable — restore sniffs the frame magic)}} + a small
+json manifest.  No orbax dependency — this is the substrate, built here.
 """
 
 from __future__ import annotations
@@ -32,7 +33,34 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:                                    # optional dep: fall back to zlib
+    import zstandard as zstd
+except ImportError:
+    zstd = None
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstd is not None:
+        return zstd.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    """Codec-agnostic restore: sniff the zstd frame magic, else zlib.
+
+    Lets a host with zstandard read zlib checkpoints and vice versa fail
+    loudly (reading a zstd checkpoint without zstandard raises ImportError
+    with a clear message rather than corrupting)."""
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstd is None:
+            raise ImportError("checkpoint was written with zstd but "
+                              "zstandard is not installed")
+        return zstd.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _flatten(tree) -> dict:
@@ -56,7 +84,6 @@ def save(ckpt_dir: str, step: int, tree, *, host_id: int = 0,
     final = d / f"step_{step:08d}"
     (tmp if host_id == 0 else tmp).mkdir(parents=True, exist_ok=True)
 
-    comp = zstd.ZstdCompressor(level=3)
     payload = {}
     for i, (key, leaf) in enumerate(sorted(_flatten(tree).items())):
         if i % num_hosts != host_id:
@@ -64,7 +91,7 @@ def save(ckpt_dir: str, step: int, tree, *, host_id: int = 0,
         arr = np.asarray(jax.device_get(leaf))
         payload[key] = {
             "dtype": str(arr.dtype), "shape": list(arr.shape),
-            "data": comp.compress(arr.tobytes()),
+            "data": _compress(arr.tobytes()),
         }
     shard_file = tmp / f"shard_{host_id:05d}of{num_hosts:05d}.msgpack"
     with open(shard_file, "wb") as f:
@@ -108,7 +135,6 @@ def restore(ckpt_dir: str, step: int, like_tree, *,
     """
     d = Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
-    dec = zstd.ZstdDecompressor()
     raw = {}
     for shard_file in sorted(d.glob("shard_*.msgpack")):
         with open(shard_file, "rb") as f:
@@ -125,7 +151,7 @@ def restore(ckpt_dir: str, step: int, like_tree, *,
         if key not in raw:
             raise KeyError(f"checkpoint missing leaf {key}")
         ent = raw[key]
-        arr = np.frombuffer(dec.decompress(ent["data"]),
+        arr = np.frombuffer(_decompress(ent["data"]),
                             dtype=ent["dtype"]).reshape(ent["shape"])
         if shard_flat is not None:
             out.append(jax.device_put(arr, shard_flat[i]))

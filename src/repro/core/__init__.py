@@ -1,15 +1,22 @@
 """repro.core — the paper's contribution as composable JAX modules.
 
+The public front door for reductions is ``repro.reduce`` (one call,
+accuracy policies, registered backends, the streaming Accumulator
+protocol); this package holds the primitives it is built from.
+
 Faithful layer:
   circuit.JugglePAC / circuit.INTAC      cycle-accurate simulators
   circuit_jax.jugglepac_scan             the same FSM as a lax.scan
 
 Production (TPU-native) layer:
   trees        fixed pairing-tree reduction schedules
-  segmented    segmented streaming reduction (variable-length sets)
+  segmented    segmented-reduction math oracle + flash-partial combines
+               (the blocked schedule itself lives in repro.reduce.backends;
+               segment_sum_blocked remains as a deprecation shim)
   intac        exact integer-domain accumulation + deterministic /
-               compressed collectives
-  juggler      bounded-slot streaming gradient accumulation
+               compressed collectives (surfaced as reduce policies)
+  juggler      bounded-slot streaming gradient accumulation (surfaced as
+               repro.reduce.TreeAccumulator)
 """
 
 from . import circuit, circuit_jax, intac, juggler, segmented, trees  # noqa: F401

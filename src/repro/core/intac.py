@@ -45,12 +45,17 @@ def choose_scale(max_abs: jnp.ndarray, num_terms: int,
     representable at the target precision, mirroring the paper's
     "specific accuracy range" argument for fixed point.
     """
-    max_abs = jnp.maximum(max_abs, jnp.float32(1e-30))
-    budget = jnp.float32(2.0 ** qbits) / (jnp.float32(num_terms) * max_abs)
+    # Work in log space: forming 2^qbits / (n * max_abs) directly overflows
+    # f32 to inf for tiny-magnitude streams, and the old 1e-30 floor made
+    # their scale so coarse that every value quantized to 0.  Floor at the
+    # smallest normal (values below it are flushed by the hardware anyway)
+    # and clamp e to the f32 exponent range so the scale stays finite.
+    max_abs = jnp.maximum(max_abs, jnp.float32(2.0 ** -126))
+    e = jnp.floor(jnp.float32(qbits) - jnp.log2(jnp.float32(num_terms))
+                  - jnp.log2(max_abs)).astype(jnp.int32)
     # ldexp(1, e) is an exact power of two; exp2(float) is approximated on
     # some backends (observed 2^26 + 64 on XLA CPU) which breaks exactness.
-    e = jnp.floor(jnp.log2(budget)).astype(jnp.int32)
-    return jnp.ldexp(jnp.float32(1.0), e)
+    return jnp.ldexp(jnp.float32(1.0), jnp.clip(e, -126, 127))
 
 
 def quantize(x: jnp.ndarray, scale) -> jnp.ndarray:
@@ -58,7 +63,22 @@ def quantize(x: jnp.ndarray, scale) -> jnp.ndarray:
 
 
 def dequantize(q: jnp.ndarray, scale) -> jnp.ndarray:
-    return q.astype(jnp.float32) / scale
+    """Descale by ``scale``; exact two-step ldexp for powers of two.
+
+    In-repo scales all come from ``choose_scale`` (powers of two): for
+    those, two half-exponent ldexp steps replace the division — XLA may
+    lower x/s as x*(1/s), and for near-clamp scales (e≈127) the
+    reciprocal (or a single-step 2^-e) is subnormal and flushes to zero
+    on CPU; halving the exponent keeps every factor normal and exact.
+    Arbitrary external scales fall back to plain division."""
+    scale = jnp.asarray(scale, jnp.float32)
+    qf = q.astype(jnp.float32)
+    e = jnp.round(jnp.log2(jnp.maximum(scale, jnp.float32(1e-45)))) \
+        .astype(jnp.int32)
+    half = e // 2
+    exact = jnp.ldexp(jnp.ldexp(qf, -half), -(e - half))
+    is_pow2 = jnp.ldexp(jnp.float32(1.0), e) == scale
+    return jnp.where(is_pow2, exact, qf / scale)
 
 
 @partial(jax.jit, static_argnames=("axis",))

@@ -96,24 +96,17 @@ def num_slots_for(num_microbatches: int) -> int:
 
 def accumulate_microbatch_grads(grad_fn, params, microbatches, *,
                                 num_microbatches: int, mean: bool = True):
-    """Scan ``grad_fn(params, mb)`` over stacked microbatches, juggling the
-    gradients through the pairing tree.  Memory: O(log n) gradient copies.
+    """Deprecated shim — use ``repro.reduce.accumulate_microbatch_grads``.
 
-    ``microbatches``: pytree with leading axis == num_microbatches.
-    Returns (mean_or_sum_grads, aux_stacked).
+    The scan-over-microbatches loop now lives behind the front door's
+    Accumulator protocol (``repro.reduce.TreeAccumulator`` wraps this
+    module's push/finalize); this wrapper forwards and will be removed.
     """
-    k = num_slots_for(num_microbatches)
-
-    def step(state, mb):
-        g, aux = grad_fn(params, mb)
-        return juggler_push(state, g), aux
-
-    # build the template from eval_shape of one microbatch's grads
-    template = jax.eval_shape(
-        lambda p, m: grad_fn(p, m)[0], params,
-        jax.tree.map(lambda x: x[0], microbatches))
-    template = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), template)
-
-    state0 = juggler_init(template, k)
-    state, aux = jax.lax.scan(step, state0, microbatches)
-    return juggler_finalize(state, mean=mean), aux
+    import warnings
+    warnings.warn("core.juggler.accumulate_microbatch_grads is deprecated; "
+                  "call repro.reduce.accumulate_microbatch_grads instead",
+                  DeprecationWarning, stacklevel=2)
+    from repro.reduce.accumulator import \
+        accumulate_microbatch_grads as _front
+    return _front(grad_fn, params, microbatches,
+                  num_microbatches=num_microbatches, mean=mean)

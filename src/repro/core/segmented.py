@@ -7,15 +7,13 @@ in input order, at full throughput, with bounded intermediate storage.
 TPU translation: the "stream" is a flat (N, D) array tiled HBM→VMEM in
 blocks; the per-cycle serial input becomes a per-grid-step block; the PIS
 register file becomes a bounded VMEM accumulator addressed by segment label.
-Three implementations share one contract:
 
-  * ``segment_sum_ref``     — pure-jnp oracle (scatter-add).
-  * ``segment_sum_blocked`` — pure-JAX streaming version: ``lax.scan`` over
-    blocks, each block contributes a one-hot matmul (MXU-shaped) into the
-    running output.  This mirrors the circuit: blocks = cycles, the running
-    (S, D) accumulator = the PIS registers, in-order emission by construction.
-  * ``kernels.jugglepac_segsum`` — the Pallas TPU kernel (same schedule,
-    explicit BlockSpec/VMEM tiling).
+The front door for segmented reductions is now ``repro.reduce`` — one call
+with accuracy policies (fast/compensated/exact) and registered backends
+(ref/blocked/pallas) all executing the identical block schedule.  This
+module keeps the scatter-add *math oracle* (``segment_sum_ref``), the
+monotone-id utilities, and the flash-partial combines; the old
+``segment_sum_blocked`` entry point survives as a deprecation shim.
 
 The bounded-storage guarantee (the paper's "2–8 PIS registers" and the
 minimum-set-size restriction) appears here as ``max_live_segments``: with
@@ -27,20 +25,38 @@ by the block size B.
 
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from .trees import pairwise_tree_sum
+# The repo-wide padding sentinel lives in the front door.  This must stay
+# a direct submodule import: there IS a load-time cycle (repro.reduce's
+# __init__ imports accumulator -> repro.core -> this module), and
+# importing the backends submodule resolves it because backends itself
+# never touches repro.core, while `from repro.reduce import ...` would
+# read the half-initialized package and ImportError.
+from repro.reduce.backends import OUT_OF_RANGE_LABEL
+
+from .trees import pairwise_tree_sum  # noqa: F401  (re-export, used widely)
 
 
 def segment_sum_ref(values: jnp.ndarray, segment_ids: jnp.ndarray,
                     num_segments: int) -> jnp.ndarray:
-    """Oracle: scatter-add per segment. values (N, D) or (N,), ids (N,)."""
-    out_shape = (num_segments,) + values.shape[1:]
-    return jnp.zeros(out_shape, values.dtype).at[segment_ids].add(values)
+    """Oracle: scatter-add per segment. values (N, D) or (N,), ids (N,).
+
+    Rows labeled outside [0, num_segments) — e.g. the repo-wide padding
+    sentinel ``OUT_OF_RANGE_LABEL`` — are dropped (negative indices would
+    otherwise wrap in JAX scatter).
+    """
+    ids = segment_ids.astype(jnp.int32)
+    ok = (ids >= 0) & (ids < num_segments)
+    ids = jnp.where(ok, ids, num_segments)      # park invalid rows
+    vals = jnp.where(ok.reshape(ok.shape + (1,) * (values.ndim - 1)),
+                     values, jnp.zeros((), values.dtype))
+    out_shape = (num_segments + 1,) + values.shape[1:]
+    return jnp.zeros(out_shape, values.dtype).at[ids].add(
+        vals)[:num_segments]
 
 
 def segment_count_ref(segment_ids: jnp.ndarray, num_segments: int,
@@ -48,50 +64,44 @@ def segment_count_ref(segment_ids: jnp.ndarray, num_segments: int,
     w = jnp.ones_like(segment_ids, jnp.float32)
     if valid is not None:
         w = w * valid.astype(jnp.float32)
-    return jnp.zeros((num_segments,), jnp.float32).at[segment_ids].add(w)
+    return segment_sum_ref(w, segment_ids, num_segments)
 
 
-@partial(jax.jit, static_argnames=("num_segments", "block_size"))
 def segment_sum_blocked(values: jnp.ndarray, segment_ids: jnp.ndarray,
                         num_segments: int, block_size: int = 512) -> jnp.ndarray:
-    """Streaming blocked segmented sum (the software JugglePAC).
+    """Deprecated shim — use ``repro.reduce(..., backend="blocked")``.
 
-    Each scan step consumes one (B, D) block and performs a one-hot matmul
-    (S×B)·(B×D) — the MXU-friendly form of "pair everything in this block by
-    label" — accumulated into the (S, D) running output.  Works for
-    arbitrary (not only monotone) segment ids; `num_segments` is the label
-    space, i.e. the paper's register-file size.
+    The streaming blocked schedule (lax.scan over (B, D) blocks, one-hot
+    matmul per block) now lives in ``repro.reduce.backends``; this wrapper
+    forwards and will be removed.  Note the front door accumulates in f32
+    and returns f32 regardless of input dtype.
     """
-    squeeze = values.ndim == 1
-    if squeeze:
-        values = values[:, None]
-    n, d = values.shape
-    nb = -(-n // block_size)
-    pad = nb * block_size - n
-    if pad:
-        values = jnp.pad(values, ((0, pad), (0, 0)))
-        # padded rows point at an out-of-range label -> one-hot row of zeros
-        segment_ids = jnp.pad(segment_ids, (0, pad),
-                              constant_values=num_segments)
-    vb = values.reshape(nb, block_size, d)
-    ib = segment_ids.reshape(nb, block_size)
-
-    def step(acc, blk):
-        v, ids = blk
-        onehot = (ids[:, None] == jnp.arange(num_segments)[None, :])
-        contrib = jnp.einsum("bs,bd->sd", onehot.astype(v.dtype), v)
-        return acc + contrib, None
-
-    acc0 = jnp.zeros((num_segments, d), values.dtype)
-    acc, _ = jax.lax.scan(step, acc0, (vb, ib))
-    return acc[:, 0] if squeeze else acc
+    warnings.warn("segment_sum_blocked is deprecated; call "
+                  "repro.reduce(values, segment_ids=..., num_segments=..., "
+                  "backend='blocked') instead", DeprecationWarning,
+                  stacklevel=2)
+    from repro import reduce as _reduce
+    return _reduce.reduce(values, segment_ids=segment_ids,
+                          num_segments=num_segments, backend="blocked",
+                          block_size=block_size)
 
 
 def segment_mean(values, segment_ids, num_segments, *,
-                 impl=segment_sum_ref, eps: float = 1e-9):
-    s = impl(values, segment_ids, num_segments)
-    c = segment_count_ref(segment_ids, num_segments)
-    c = jnp.maximum(c, eps)
+                 impl=segment_sum_ref, valid: Optional[jnp.ndarray] = None,
+                 eps: float = 1e-9):
+    """Per-segment mean; sums *and counts* go through ``impl``.
+
+    ``impl`` is any segment-sum with the ``(values, ids, num_segments)``
+    contract (the ref oracle, ``repro.reduce`` backends via shim, the
+    pallas wrapper...).  ``valid`` masks rows out of both numerator and
+    denominator by relabeling them ``OUT_OF_RANGE_LABEL``.
+    """
+    ids = segment_ids.astype(jnp.int32)
+    if valid is not None:
+        ids = jnp.where(valid, ids, jnp.int32(OUT_OF_RANGE_LABEL))
+    s = impl(values, ids, num_segments)
+    c = impl(jnp.ones(ids.shape, jnp.float32), ids, num_segments)
+    c = jnp.maximum(c.astype(jnp.float32), eps)
     return s / c.reshape((num_segments,) + (1,) * (s.ndim - 1))
 
 

@@ -2,8 +2,12 @@
 the distributed-optimization path.
 
 ``make_shardmap_train_step`` builds a data-parallel training step where the
-gradient reduction is *explicit* rather than XLA-inserted, enabling the two
-JugglePAC/INTAC distributed tricks:
+gradient reduction is *explicit* rather than XLA-inserted.  The reduction
+itself goes through the ``repro.reduce`` front door: microbatch gradients
+stream through the Accumulator protocol, and the cross-device mean is a
+``repro.reduce.collective_mean`` policy — ``fast`` (plain hierarchical),
+``compensated`` (INTAC compressed + error feedback), or ``exact``
+(full-width integer psum).  The JugglePAC/INTAC distributed tricks:
 
   1. **INTAC compressed all-reduce** — gradients are quantized to ``bits``-bit
      fixed point with a shared power-of-two scale, summed in the exact
@@ -13,7 +17,7 @@ JugglePAC/INTAC distributed tricks:
 
   2. **Gradient juggler microbatching** — within a step, microbatch
      gradients accumulate through the binary-counter pairing tree
-     (core.juggler): O(log m) live gradient copies, O(log m) rounding-error
+     (repro.reduce.TreeAccumulator): O(log m) live gradient copies, O(log m) rounding-error
      growth, schedule independent of microbatch grouping.
 
   3. **Hierarchical reduction** — 'data' (in-pod ICI) first, then 'pod'
@@ -25,7 +29,6 @@ step is benchmarked against it in benchmarks/ and exercised by tests.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax
@@ -33,7 +36,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import intac, juggler
+from repro import reduce as _reduce
 from repro.models import loss_fn
 from repro.models.config import ModelConfig
 from repro.optim import adamw
@@ -42,6 +45,7 @@ from repro.optim import adamw
 def make_shardmap_train_step(cfg: ModelConfig, mesh, *, lr_fn: Callable,
                              num_microbatches: int = 1,
                              compress_bits: Optional[int] = 8,
+                             reduce_policy: Optional[str] = None,
                              moe_impl: str = "dense",
                              remat: bool = False,
                              clip_norm: float = 1.0):
@@ -49,8 +53,16 @@ def make_shardmap_train_step(cfg: ModelConfig, mesh, *, lr_fn: Callable,
 
     state = (params, opt_state, ef_residuals); batch leading dim must be
     divisible by (dp_size * num_microbatches).
+
+    ``reduce_policy`` picks the collective accuracy tier explicitly
+    ("fast" | "compensated" | "exact"); when None it is derived from
+    ``compress_bits`` (bits set => "compensated", else "fast") for
+    backward compatibility.
     """
     axes = tuple(mesh.axis_names)
+    policy = reduce_policy or ("compensated" if compress_bits is not None
+                               else "fast")
+    bits = compress_bits if compress_bits is not None else 8
 
     def step(params, opt_state, residuals, batch):
         # ---- per-shard microbatch gradients through the pairing tree ----
@@ -65,29 +77,16 @@ def make_shardmap_train_step(cfg: ModelConfig, mesh, *, lr_fn: Callable,
                 lambda x: x.reshape((num_microbatches,
                                      x.shape[0] // num_microbatches)
                                     + x.shape[1:]), batch)
-            grads, (losses, _) = juggler.accumulate_microbatch_grads(
+            grads, (losses, _) = _reduce.accumulate_microbatch_grads(
                 grad_fn, params, mbs, num_microbatches=num_microbatches,
                 mean=True)
             loss = jnp.mean(losses)
         else:
             grads, (loss, _) = grad_fn(params, batch)
 
-        # ---- gradient reduction across the fleet ----
-        if compress_bits is not None:
-            new_res = []
-            flat_g, tdef = jax.tree.flatten(grads)
-            flat_r = tdef.flatten_up_to(residuals)
-            red = []
-            for g, r in zip(flat_g, flat_r):
-                m, nr = _hierarchical_compressed_mean(
-                    g, r, axes, bits=compress_bits)
-                red.append(m)
-                new_res.append(nr)
-            grads = tdef.unflatten(red)
-            residuals = tdef.unflatten(new_res)
-        else:
-            grads = jax.tree.map(
-                lambda g: _hierarchical_mean(g, axes), grads)
+        # ---- gradient reduction across the fleet: one policy knob ----
+        grads, residuals = _reduce.collective_mean_tree(
+            grads, residuals, axes, policy=policy, bits=bits)
 
         lr = lr_fn(opt_state.count + 1)   # count is 0-based
         params, opt_state, gnorm = adamw.update(
@@ -102,34 +101,6 @@ def make_shardmap_train_step(cfg: ModelConfig, mesh, *, lr_fn: Callable,
                      in_specs=(pspec, pspec, pspec, bspec),
                      out_specs=(pspec, pspec, pspec, pspec),
                      check_rep=False)
-
-
-def _hierarchical_mean(g, axes):
-    """data-axis psum (in-pod ICI) first, then pod axis (DCI)."""
-    for a in reversed(axes):            # innermost (fastest) axis first
-        g = jax.lax.psum(g, a)
-    n = 1.0
-    return g / jax.lax.psum(jnp.float32(1.0), axes)
-
-
-def _hierarchical_compressed_mean(g, residual, axes, *, bits: int):
-    """INTAC compressed mean: exact integer sum per axis, one dequantize.
-
-    The in-pod reduction runs at higher precision (bits) than needed and
-    the cross-pod hop reuses the same integer payload — the quantization
-    error is charged once and error-fed-back.
-    """
-    xr = g + residual
-    gmax = jnp.max(jnp.abs(xr))
-    for a in axes:
-        gmax = jax.lax.pmax(gmax, a)
-    scale = intac.choose_scale(gmax, 1, qbits=bits - 1)
-    q = intac.quantize(xr, scale)
-    new_residual = xr - intac.dequantize(q, scale)
-    for a in reversed(axes):
-        q = jax.lax.psum(q, a)          # exact, associative — any topology
-    n = jax.lax.psum(jnp.float32(1.0), axes)
-    return intac.dequantize(q, scale) / n, new_residual
 
 
 def init_residuals(params):

@@ -54,7 +54,9 @@ def segsum_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
     label, which one-hots to a zero row).
     """
     n, d = values.shape
-    assert n % block_rows == 0, "pad in the wrapper"
+    if n % block_rows:
+        raise ValueError(f"segsum_pallas: N={n} must be a multiple of "
+                         f"block_rows={block_rows}; pad in the wrapper")
     nb = n // block_rows
     ids2 = segment_ids.reshape(n, 1).astype(jnp.int32)
     kernel = functools.partial(_segsum_kernel, num_segments=num_segments,
@@ -70,3 +72,80 @@ def segsum_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((num_segments, d), jnp.float32),
         interpret=interpret,
     )(ids2, values)
+
+
+# ---------------------------------------------------------------------------
+# Policy-aware variant for repro.reduce
+# ---------------------------------------------------------------------------
+
+
+def _segsum_policy_kernel(ids_ref, vals_ref, *out_refs, num_segments: int,
+                          seg_offset: int, policy: str, acc_dtype):
+    """The same streaming schedule with the accuracy-policy carry baked in.
+
+    ``fast``        out = (acc f32,)         acc += contrib
+    ``compensated`` out = (acc, comp f32)    Knuth two-sum across blocks
+    ``exact``       out = (acc int32,)       integer add (values arrive
+                                             pre-quantized; associative, so
+                                             bitwise-equal for any schedule)
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        for r in out_refs:
+            r[...] = jnp.zeros_like(r)
+
+    ids = ids_ref[...]                              # (B, 1) int32
+    vals = vals_ref[...]                            # (B, D) domain dtype
+    labels = jax.lax.broadcasted_iota(
+        jnp.int32, (1, num_segments), 1) + seg_offset
+    onehot = (ids == labels).astype(vals.dtype)     # (B, S)
+    contrib = jnp.dot(onehot.T, vals, preferred_element_type=acc_dtype)
+
+    if policy == "compensated":
+        # the one canonical two_sum: the cross-backend bitwise contract
+        # depends on this op sequence matching the blocked/ref backends
+        from repro.reduce.policy import two_sum
+        s, e = two_sum(out_refs[0][...], contrib)
+        out_refs[0][...] = s
+        out_refs[1][...] += e
+    else:                                           # fast / exact
+        out_refs[0][...] += contrib
+
+
+def segsum_policy_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                         num_segments: int, *, policy: str = "fast",
+                         carry_len: int = 1, block_rows: int = 512,
+                         seg_offset: int = 0, interpret: bool = False):
+    """values (N, D) already in the policy's domain dtype (f32 or int32),
+    ids (N,) int32 -> tuple of ``carry_len`` (num_segments, D) carry arrays.
+
+    N must be a multiple of block_rows (the backend pads with
+    ``OUT_OF_RANGE_LABEL``, which one-hots to a zero row).
+    """
+    n, d = values.shape
+    if n % block_rows:
+        raise ValueError(f"segsum_policy_pallas: N={n} must be a multiple "
+                         f"of block_rows={block_rows}; pad in the backend")
+    nb = n // block_rows
+    acc_dtype = values.dtype
+    ids2 = segment_ids.reshape(n, 1).astype(jnp.int32)
+    kernel = functools.partial(_segsum_policy_kernel,
+                               num_segments=num_segments,
+                               seg_offset=seg_offset, policy=policy,
+                               acc_dtype=acc_dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, 1), lambda b: (b, 0)),
+            pl.BlockSpec((block_rows, d), lambda b: (b, 0)),
+        ],
+        out_specs=[pl.BlockSpec((num_segments, d), lambda b: (0, 0))
+                   for _ in range(carry_len)],
+        out_shape=[jax.ShapeDtypeStruct((num_segments, d), acc_dtype)
+                   for _ in range(carry_len)],
+        interpret=interpret,
+    )(ids2, values)
+    return tuple(out) if isinstance(out, (list, tuple)) else (out,)

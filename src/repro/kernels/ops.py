@@ -15,10 +15,13 @@ The wrappers own the padding/tiling contracts so kernel bodies stay minimal:
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.reduce.backends import OUT_OF_RANGE_LABEL
 
 from . import flash_decode as _fd
 from . import intac_accum as _ia
@@ -32,6 +35,13 @@ def _interpret_default() -> bool:
 
 # VMEM budget the segsum accumulator tile may claim (floats).
 _SEGSUM_ACC_BUDGET = 2 * 1024 * 1024  # 8 MiB of f32 out of ~16 MiB VMEM
+
+
+def seg_tile_for(num_segments: int, d: int) -> int:
+    """Label-space tile size so the (S, D) accumulator tile fits the VMEM
+    budget — the "few PIS registers, not a BRAM" rule.  The one source of
+    truth for both this wrapper and the repro.reduce pallas backend."""
+    return max(1, min(num_segments, _SEGSUM_ACC_BUDGET // max(d, 1)))
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "block_rows",
@@ -48,11 +58,11 @@ def segment_sum(values: jnp.ndarray, segment_ids: jnp.ndarray,
     pad = (-n) % block_rows
     if pad:
         values = jnp.pad(values, ((0, pad), (0, 0)))
-        segment_ids = jnp.pad(segment_ids, (0, pad), constant_values=-1)
+        segment_ids = jnp.pad(segment_ids, (0, pad),
+                              constant_values=OUT_OF_RANGE_LABEL)
 
-    # Tile the label space so the accumulator fits the VMEM budget — the
-    # "few PIS registers, not a BRAM" rule.
-    seg_tile = max(1, min(num_segments, _SEGSUM_ACC_BUDGET // max(d, 1)))
+    # Tile the label space so the accumulator fits the VMEM budget.
+    seg_tile = seg_tile_for(num_segments, d)
     outs = []
     for off in range(0, num_segments, seg_tile):
         s = min(seg_tile, num_segments - off)
@@ -83,7 +93,15 @@ def intac_accum(values: jnp.ndarray, scale: jnp.ndarray, *,
 def intac_sum_exact(values: jnp.ndarray, scale: jnp.ndarray, *,
                     block_rows: int = 256,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Convenience: exact accumulate + single final resolve -> (D,) f32."""
+    """Deprecated shim — use ``repro.reduce(values, policy="exact")``.
+
+    The front door sizes the fixed-point scale automatically; keep calling
+    this only if you need an explicit externally-agreed ``scale`` (then
+    prefer ``intac_accum`` + ``ref.limbs_to_float`` directly).
+    """
+    warnings.warn("intac_sum_exact is deprecated; call "
+                  "repro.reduce(values, policy='exact') instead",
+                  DeprecationWarning, stacklevel=2)
     limbs = intac_accum(values, scale, block_rows=block_rows,
                         interpret=interpret)
     return limbs_to_float(limbs, scale)

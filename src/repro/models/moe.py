@@ -199,10 +199,16 @@ def combine_segsum(expert_rows, row_token_ids, num_tokens, *, interpret=None):
     (token, choice) pair that survived capacity; row_token_ids (R,): which
     token each row belongs to.  Variable rows-per-token == the paper's
     variable-length sets.  Returns (num_tokens, D).
+
+    Goes through the ``repro.reduce`` front door: backend auto-selection
+    picks the pallas kernel on TPU and the scanned blocks elsewhere —
+    both produce bitwise-identical results.
     """
-    from repro.kernels import ops
-    return ops.segment_sum(expert_rows, row_token_ids, num_tokens,
-                           interpret=interpret)
+    from repro import reduce as _reduce
+    backend = "pallas" if interpret is not None else None
+    return _reduce.reduce(expert_rows, segment_ids=row_token_ids,
+                          num_segments=num_tokens, backend=backend,
+                          interpret=interpret)
 
 
 def moe_apply(params, x, cfg: ModelConfig, *, impl: str = "capacity",

@@ -1,0 +1,63 @@
+"""repro.reduce — one front door for every reduction in the repo.
+
+The paper's contribution is a single contract: stream in back-to-back
+variable-length sets, emit one in-order result per set with bounded
+state.  This package exposes that contract once, with two orthogonal
+first-class knobs:
+
+  * **policy** (accuracy): ``fast`` (f32 fixed pairing tree),
+    ``compensated`` (Kahan/two-sum), ``exact`` (INTAC integer limbs) —
+    ``policy.py``, extensible via ``@register_policy``.
+  * **backend** (executor): ``ref`` / ``blocked`` / ``pallas`` — all run
+    the same block schedule so results match bitwise — ``backends.py``,
+    extensible via ``@register_backend``.
+
+Entry points:
+  ``reduce(values, segment_ids=..., num_segments=..., op=..., ...)``
+      the call — see ``api.py``; ``ReduceSpec`` for reusable static specs.
+  ``Accumulator`` protocol (``accumulator.py``)
+      streaming init/push/merge/finalize — TreeAccumulator (gradient
+      juggler), KahanAccumulator, LimbAccumulator (INTAC), and
+      FlashAccumulator (online softmax) compose with lax.scan and trees.
+  ``collective_mean`` (``collective.py``)
+      the same policy knob for cross-device gradient means.
+  ``OUT_OF_RANGE_LABEL``
+      the repo-wide padding sentinel: rows so labeled drop out of every
+      sum and count, on every backend.
+"""
+
+from .accumulator import (Accumulator, FlashAccumulator,  # noqa: F401
+                          KahanAccumulator, LimbAccumulator,
+                          TreeAccumulator, accumulate_microbatch_grads,
+                          merge_tree, scan_accumulate)
+from .api import ReduceSpec, reduce  # noqa: F401
+from .backends import (BACKENDS, Backend, OUT_OF_RANGE_LABEL,  # noqa: F401
+                       get_backend, mask_out_of_range, register_backend,
+                       select_backend)
+from .collective import (COLLECTIVE_POLICIES, collective_mean,  # noqa: F401
+                         collective_mean_tree)
+from .policy import (POLICIES, Policy, get_policy,  # noqa: F401
+                     register_policy, two_sum)
+
+# Make the module itself callable so ``repro.reduce(values, ...)`` is the
+# front door, while ``repro.reduce.ReduceSpec`` etc. keep working.
+import sys as _sys
+
+
+class _CallableModule(_sys.modules[__name__].__class__):
+    def __call__(self, *args, **kwargs):
+        return reduce(*args, **kwargs)
+
+
+_sys.modules[__name__].__class__ = _CallableModule
+
+__all__ = [
+    "reduce", "ReduceSpec", "OUT_OF_RANGE_LABEL",
+    "Policy", "POLICIES", "register_policy", "get_policy", "two_sum",
+    "Backend", "BACKENDS", "register_backend", "get_backend",
+    "select_backend", "mask_out_of_range",
+    "Accumulator", "TreeAccumulator", "KahanAccumulator",
+    "LimbAccumulator", "FlashAccumulator", "scan_accumulate", "merge_tree",
+    "accumulate_microbatch_grads",
+    "collective_mean", "collective_mean_tree", "COLLECTIVE_POLICIES",
+]

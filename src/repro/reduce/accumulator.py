@@ -1,0 +1,217 @@
+"""The streaming ``Accumulator`` protocol — one contract for every state
+machine in the repo.
+
+JugglePAC is ultimately a streaming accumulator with bounded state; the
+repo grew three ad-hoc incarnations of that idea (the gradient juggler's
+``JugglerState``, INTAC's ``LimbState``, flash-decode's (m, l, o)
+partials), each with its own init/step/merge spelling.  This module gives
+them one protocol:
+
+    init(template)      -> state        bounded, pytree-shaped
+    push(state, x)      -> state        consume one stream element
+    merge(a, b)         -> state        combine two partial streams
+                                        (cross-block / cross-device)
+    finalize(state)     -> value        the once-per-set "final addition"
+
+Any instance composes with ``lax.scan`` (push is the step function) and
+with fixed pairing trees (``merge_tree``), so the same code path handles
+microbatch gradients, exact distributed sums, and attention partials.
+
+Instances:
+  * ``TreeAccumulator``  — binary-counter pairwise tree (wraps
+    ``core.juggler``): O(log n) live state, O(log n) error growth.
+  * ``KahanAccumulator`` — (sum, compensation) two-sum pair: O(1) state,
+    ~f64 accuracy.
+  * ``LimbAccumulator``  — INTAC two-limb int32 carry-save (wraps
+    ``core.intac``): exact, order-independent, one rounding at finalize.
+  * ``FlashAccumulator`` — online-softmax (m, l, o) triple (wraps
+    ``core.segmented``): the "any multi-cycle operator" clause of the
+    paper, instantiated for attention.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import intac, juggler
+from .policy import two_sum
+
+
+@runtime_checkable
+class Accumulator(Protocol):
+    """Structural protocol: anything with init/push/merge/finalize."""
+
+    def init(self, template) -> Any: ...
+
+    def push(self, state, x) -> Any: ...
+
+    def merge(self, a, b) -> Any: ...
+
+    def finalize(self, state) -> Any: ...
+
+
+class TreeAccumulator:
+    """Binary-counter pairwise-tree accumulation of pytrees.
+
+    The software PIS: ``num_slots`` >= ceil(log2 pushes) + 1 slots bound
+    the live state; the pairing schedule depends only on the push count.
+    """
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+
+    @classmethod
+    def for_count(cls, num_pushes: int) -> "TreeAccumulator":
+        return cls(juggler.num_slots_for(num_pushes))
+
+    def init(self, template) -> juggler.JugglerState:
+        return juggler.juggler_init(template, self.num_slots)
+
+    def push(self, state, x) -> juggler.JugglerState:
+        return juggler.juggler_push(state, x)
+
+    def merge(self, a, b) -> juggler.JugglerState:
+        """Fold b's slots to one partial and insert it into a's counter —
+        a fixed, deterministic (if unbalanced) pairing of the two trees."""
+        folded = juggler.juggler_finalize(b)
+        merged = juggler.juggler_push(a, folded)
+        return merged._replace(count=a.count + b.count)
+
+    def finalize(self, state, *, mean: bool = False):
+        return juggler.juggler_finalize(state, mean=mean)
+
+
+class KahanAccumulator:
+    """Compensated (sum, comp) accumulation of a single array/pytree."""
+
+    def init(self, template):
+        z = jax.tree.map(lambda t: jnp.zeros(jnp.shape(t), jnp.float32),
+                         template)
+        return (z, jax.tree.map(jnp.zeros_like, z))
+
+    def push(self, state, x):
+        acc, comp = state
+        # two maps so tuple-valued two_sum never confuses pytree flattening
+        # (XLA CSE merges the duplicated arithmetic under jit).
+        s = jax.tree.map(lambda a, b: two_sum(a, b)[0], acc, x)
+        e = jax.tree.map(lambda a, b: two_sum(a, b)[1], acc, x)
+        return (s, jax.tree.map(jnp.add, comp, e))
+
+    def merge(self, a, b):
+        state = self.push(a, b[0])                   # two-sum the sums
+        return (state[0],
+                jax.tree.map(lambda c, cb: c + cb, state[1], b[1]))
+
+    def finalize(self, state):
+        acc, comp = state
+        return jax.tree.map(lambda a, c: a + c, acc, comp)
+
+
+class LimbAccumulator:
+    """INTAC two-limb carry-save accumulation (exact within quantization).
+
+    ``scale`` is the shared power-of-two from ``intac.choose_scale`` — the
+    a-priori bit-width parameterization; push/merge are pure integer ops.
+    """
+
+    def __init__(self, scale):
+        self.scale = scale
+
+    def init(self, template) -> intac.LimbState:
+        return intac.limb_init(jnp.shape(template), self.scale)
+
+    def push(self, state, x) -> intac.LimbState:
+        return intac.limb_add(state, x)
+
+    def merge(self, a, b) -> intac.LimbState:
+        return intac.limb_merge(a, b)
+
+    def finalize(self, state) -> jnp.ndarray:
+        return intac.limb_finalize(state)
+
+
+class FlashAccumulator:
+    """Online-softmax partials: state = (max m, denom l, weighted out o).
+
+    ``push``/``merge`` are the same associative combine (flash partials are
+    their own partial-stream type); ``finalize`` returns the normalized
+    output ``o / l``.
+    """
+
+    _NEG = -1e30
+
+    def init(self, template):
+        m, l, o = template
+        return (jnp.full(jnp.shape(m), self._NEG, jnp.float32),
+                jnp.zeros(jnp.shape(l), jnp.float32),
+                jnp.zeros(jnp.shape(o), jnp.float32))
+
+    def push(self, state, partial):
+        # lazy import: core.segmented imports repro.reduce for the shared
+        # sentinel, so this edge must not exist at module-load time.
+        from repro.core.segmented import flash_partial_combine
+        m1, l1, o1 = state
+        m2, l2, o2 = partial
+        return flash_partial_combine(m1, l1, o1, m2, l2, o2)
+
+    def merge(self, a, b):
+        return self.push(a, b)
+
+    def finalize(self, state):
+        m, l, o = state
+        return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Composition helpers
+# ---------------------------------------------------------------------------
+
+
+def scan_accumulate(acc: Accumulator, xs, template=None):
+    """Fold a stacked stream (leading axis) through ``acc`` with lax.scan."""
+    if template is None:
+        template = jax.tree.map(lambda x: x[0], xs)
+    state0 = acc.init(template)
+    state, _ = jax.lax.scan(lambda s, x: (acc.push(s, x), None), state0, xs)
+    return acc.finalize(state)
+
+
+def merge_tree(acc: Accumulator, states):
+    """Fixed pairwise-tree merge of a list of accumulator states."""
+    items = list(states)
+    if not items:
+        raise ValueError("merge_tree: empty state list")
+    while len(items) > 1:
+        nxt = [acc.merge(items[i], items[i + 1])
+               for i in range(0, len(items) - 1, 2)]
+        if len(items) % 2:
+            nxt.append(items[-1])
+        items = nxt
+    return items[0]
+
+
+def accumulate_microbatch_grads(grad_fn, params, microbatches, *,
+                                num_microbatches: int, mean: bool = True):
+    """Microbatch gradient accumulation through the Accumulator protocol.
+
+    The front-door replacement for ``core.juggler.accumulate_microbatch_
+    grads``: scan ``grad_fn(params, mb)`` over stacked microbatches,
+    pushing each gradient into a ``TreeAccumulator`` (O(log n) live
+    copies, fixed pairing schedule).  Returns (mean_or_sum, aux_stacked).
+    """
+    acc = TreeAccumulator.for_count(num_microbatches)
+
+    template = jax.eval_shape(
+        lambda p, m: grad_fn(p, m)[0], params,
+        jax.tree.map(lambda x: x[0], microbatches))
+    template = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), template)
+
+    def step(state, mb):
+        g, aux = grad_fn(params, mb)
+        return acc.push(state, g), aux
+
+    state, aux = jax.lax.scan(step, acc.init(template), microbatches)
+    return acc.finalize(state, mean=mean), aux

@@ -1,0 +1,162 @@
+"""The front door: ``repro.reduce(...)`` and ``ReduceSpec``.
+
+One call for every reduction in the repo — segmented or whole-stream,
+sum or mean, any accuracy policy, any executor:
+
+    from repro import reduce
+    out = reduce(values)                                   # (N, D) -> (D,)
+    out = reduce(values, segment_ids=ids, num_segments=8)  # -> (8, D)
+    out = reduce(values, segment_ids=ids, num_segments=8,
+                 op="mean", policy="exact", backend="pallas")
+
+The paper's contract is preserved end to end: one in-order result per
+variable-length set, a fixed pairing schedule (results depend only on
+shapes, never on the executor), bounded accumulator state.
+
+``ReduceSpec`` captures everything static about a reduction (op, policy,
+backend, block size) in one frozen, hashable value — build it once, reuse
+it across calls and jit boundaries, and the dispatch cache keys on it
+directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .backends import (OUT_OF_RANGE_LABEL, get_backend, mask_out_of_range,
+                       select_backend)
+from .policy import get_policy
+
+
+@dataclasses.dataclass(frozen=True)
+class ReduceSpec:
+    """Static description of a reduction — hashable, so jit-cache-friendly.
+
+    ``backend=None`` means auto-select (TPU kernel on TPU, scanned blocks
+    elsewhere); ``interpret=None`` lets the pallas backend decide.
+    """
+
+    op: str = "sum"                   # "sum" | "mean"
+    policy: str = "fast"              # "fast" | "compensated" | "exact"
+    backend: Optional[str] = None
+    block_size: int = 512
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.op not in ("sum", "mean"):
+            raise ValueError(f"op must be 'sum' or 'mean', got {self.op!r}")
+        get_policy(self.policy)                      # validate eagerly
+        if self.backend is not None:
+            get_backend(self.backend)
+
+    def replace(self, **kw) -> "ReduceSpec":
+        return dataclasses.replace(self, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "num_segments",
+                                             "segmented", "squeeze_d"))
+def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
+              segmented: bool, squeeze_d: bool):
+    policy = get_policy(spec.policy)
+    n, d = values.shape
+    backend = (get_backend(spec.backend) if spec.backend is not None
+               else select_backend(policy))
+    if not backend.supports(policy):
+        raise ValueError(f"backend {backend.name!r} does not implement "
+                         f"policy {policy.name!r} "
+                         f"(capabilities: {sorted(backend.policies)})")
+
+    if n == 0:
+        # empty stream: identity on every backend (the pallas grid cannot
+        # be empty, and exact's max-abs pass needs at least one row)
+        out = jnp.zeros((num_segments, d), jnp.float32)
+    else:
+        segment_ids = mask_out_of_range(segment_ids, num_segments)
+        # zero dropped rows' payloads too: the one-hot schedule ignores
+        # them regardless, but policy.prepare must not see them (e.g. the
+        # exact policy sizes its quantization scale from max |value| — a
+        # huge sentinel-labeled row would poison the scale for kept rows)
+        values = jnp.where((segment_ids >= 0)[:, None], values,
+                           jnp.zeros((), values.dtype))
+        domain, ctx = policy.prepare(values, n)
+        carry = backend.run(domain, segment_ids, num_segments,
+                            policy=policy, block_size=spec.block_size,
+                            interpret=spec.interpret)
+        out = policy.finalize(carry, ctx)            # (S, D) f32
+
+    if spec.op == "mean" and n > 0:
+        # Counts: small exact integers, so a single scatter-add of ones is
+        # bitwise-identical to running the block schedule again (both
+        # produce the same exact values in f32) at a fraction of the cost,
+        # and it is backend-independent by construction.  segment_ids is
+        # already sentinel-masked; park dropped rows on a scratch row.
+        ids_safe = jnp.where(segment_ids >= 0, segment_ids, num_segments)
+        cnt = jnp.zeros((num_segments + 1, 1), jnp.float32) \
+            .at[ids_safe].add(1.0)[:num_segments]          # (S, 1)
+        out = out / jnp.maximum(cnt, 1.0)
+
+    if not segmented:
+        out = out[0]
+    if squeeze_d:
+        out = out[..., 0]
+    return out
+
+
+def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
+           op: str = "sum", policy: str = "fast",
+           backend: Optional[str] = None, block_size: int = 512,
+           interpret: Optional[bool] = None,
+           spec: Optional[ReduceSpec] = None) -> jnp.ndarray:
+    """Reduce a value stream, optionally partitioned into labeled sets.
+
+    Args:
+      values: (N,) or (N, D) array; any float dtype (accumulation is f32
+        or exact int32 per ``policy``; the result is f32).
+      segment_ids: optional (N,) int labels.  Rows labeled outside
+        [0, num_segments) — including the repo-wide padding sentinel
+        ``OUT_OF_RANGE_LABEL`` — are dropped from sums *and* counts.
+      num_segments: static label-space size; required with ``segment_ids``.
+      op: "sum" or "mean" (mean counts only in-range rows).
+      policy: accuracy tier — "fast", "compensated", or "exact".
+      backend: executor — "ref", "blocked", "pallas", or None to
+        auto-select.
+      block_size: rows per schedule block (the paper's cycle granularity).
+      interpret: force/forbid pallas interpret mode (None = auto).
+      spec: a prebuilt ``ReduceSpec``; overrides the per-call knobs above.
+
+    Returns:
+      f32 array: (num_segments, D) / (num_segments,) when segmented,
+      (D,) / scalar otherwise.
+    """
+    if spec is None:
+        spec = ReduceSpec(op=op, policy=policy, backend=backend,
+                          block_size=block_size, interpret=interpret)
+    values = jnp.asarray(values)
+    if values.ndim not in (1, 2):
+        raise ValueError(f"values must be (N,) or (N, D), "
+                         f"got shape {values.shape}")
+    squeeze_d = values.ndim == 1
+    if squeeze_d:
+        values = values[:, None]
+
+    segmented = segment_ids is not None
+    if segmented:
+        if num_segments is None:
+            raise ValueError("num_segments (static int) is required with "
+                             "segment_ids")
+        segment_ids = jnp.asarray(segment_ids)
+    else:
+        if num_segments is not None:
+            raise ValueError("num_segments was given without segment_ids; "
+                             "pass both for a segmented reduction")
+        num_segments = 1
+        segment_ids = jnp.zeros((values.shape[0],), jnp.int32)
+
+    return _dispatch(values, segment_ids, spec=spec,
+                     num_segments=int(num_segments), segmented=segmented,
+                     squeeze_d=squeeze_d)

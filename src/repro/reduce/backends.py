@@ -1,0 +1,212 @@
+"""Backend registry for ``repro.reduce`` — one schedule, three executors.
+
+Every backend runs the *same* fixed block schedule (the JugglePAC pairing
+contract): the (N, D) stream is padded to row blocks with
+``OUT_OF_RANGE_LABEL``, each block contributes a one-hot matmul
+``contrib = onehot(ids).T @ vals`` (the MXU form of "pair everything in
+this block by label"), and blocks fold into the policy carry strictly in
+stream order.  Because the schedule — not the executor — defines the
+addition order, results are bitwise identical across backends:
+
+  * ``ref``      — unrolled Python loop over blocks; the readable oracle of
+                   the schedule (not of the math — that is
+                   ``core.segmented.segment_sum_ref``).
+  * ``blocked``  — ``lax.scan`` over blocks; jit-friendly, the CPU/GPU
+                   default.
+  * ``pallas``   — the TPU kernel (interpret mode off-TPU), with the VMEM
+                   accumulator budget enforced by label-space tiling —
+                   "2–8 PIS registers, not a BRAM".
+
+New executors (GPU pallas, shard_map multi-device, ...) drop in with
+``@register_backend``; the supported-policies capability set gates both
+explicit selection and ``select_backend``'s auto choice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, FrozenSet, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .policy import Policy
+
+#: The one padding sentinel for every reduction entry point in this repo.
+#: Negative => never equal to a real label in [0, num_segments), so one-hot
+#: comparisons drop padded rows for free; scatter paths must mask it
+#: explicitly (negative indices wrap in JAX) — see ``mask_out_of_range``.
+OUT_OF_RANGE_LABEL: int = -1
+
+BACKENDS: Dict[str, "Backend"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A registered executor of the block schedule.
+
+    ``run(values, ids, num_segments, policy=..., block_size=...,
+    interpret=...)`` receives domain-prepared (N, D) values (f32 or int32 —
+    ``Policy.prepare`` already ran) and returns the policy carry tuple of
+    (num_segments, D) arrays, *not yet finalized*.
+    """
+
+    name: str
+    run: Callable
+    policies: FrozenSet[str]          # capability: policies it can execute
+    description: str = ""
+
+    def supports(self, policy: Policy) -> bool:
+        return "*" in self.policies or policy.name in self.policies
+
+
+def register_backend(name: str, *, policies, description: str = ""):
+    """Decorator: register ``fn`` as backend ``name``.
+
+    ``policies``: iterable of policy names the executor implements, or the
+    string "*" for schedule-generic executors that thread any policy carry.
+    """
+    def deco(fn):
+        if isinstance(policies, str):
+            if policies != "*":
+                raise ValueError(
+                    f"register_backend({name!r}): policies must be an "
+                    f"iterable of policy names or the string '*', got "
+                    f"{policies!r} (did you mean ({policies!r},)?)")
+            caps = frozenset({"*"})
+        else:
+            caps = frozenset(policies)
+        BACKENDS[name] = Backend(name=name, run=fn, policies=caps,
+                                 description=description)
+        return fn
+    return deco
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; registered: "
+                         f"{sorted(BACKENDS)}") from None
+
+
+def select_backend(policy: Policy) -> Backend:
+    """Auto-selection: the TPU kernel on TPU, the scanned form elsewhere.
+
+    The pallas wrapper already tiles the label space to its VMEM budget, so
+    accumulator size never disqualifies it; off-TPU the kernel runs in
+    interpret mode (a validation path, not a fast path), so ``blocked`` is
+    the performance default.
+    """
+    if jax.default_backend() == "tpu":
+        cand = get_backend("pallas")
+        if cand.supports(policy):
+            return cand
+    return get_backend("blocked")
+
+
+# ---------------------------------------------------------------------------
+# Shared schedule helpers
+# ---------------------------------------------------------------------------
+
+
+def mask_out_of_range(segment_ids: jnp.ndarray,
+                      num_segments: int) -> jnp.ndarray:
+    """Map every label outside [0, num_segments) to OUT_OF_RANGE_LABEL."""
+    ids = segment_ids.astype(jnp.int32)
+    ok = (ids >= 0) & (ids < num_segments)
+    return jnp.where(ok, ids, jnp.int32(OUT_OF_RANGE_LABEL))
+
+
+def _pad_to_blocks(values, segment_ids, block_size):
+    """Pad N to a multiple of block_size; padded rows carry the sentinel."""
+    n, d = values.shape
+    pad = (-n) % block_size
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        segment_ids = jnp.pad(segment_ids, (0, pad),
+                              constant_values=OUT_OF_RANGE_LABEL)
+    nb = (n + pad) // block_size
+    return (values.reshape(nb, block_size, d),
+            segment_ids.reshape(nb, block_size).astype(jnp.int32), nb)
+
+
+def _block_contrib(vals, ids, num_segments, acc_dtype):
+    """One schedule step: the (S, D) one-hot matmul for one (B, D) block.
+
+    Written identically to the pallas kernel body (ids as a (B, 1) column
+    against a (1, S) label row, then ``jnp.dot``) so every backend lowers
+    to the same dot_general and the cross-backend bitwise contract holds.
+    """
+    labels = jnp.arange(num_segments, dtype=jnp.int32)[None, :]
+    onehot = (ids[:, None] == labels).astype(vals.dtype)
+    return jnp.dot(onehot.T, vals, preferred_element_type=acc_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+
+@register_backend("ref", policies="*",
+                  description="unrolled Python loop over blocks; the "
+                              "readable schedule oracle")
+def _run_ref(values, segment_ids, num_segments, *, policy: Policy,
+             block_size: int = 512, interpret: Optional[bool] = None):
+    vb, ib, nb = _pad_to_blocks(values, segment_ids, block_size)
+    carry = policy.init(num_segments, values.shape[1])
+    for b in range(nb):
+        contrib = _block_contrib(vb[b], ib[b], num_segments,
+                                 policy.acc_dtype)
+        carry = policy.update(carry, contrib)
+        # pin the block boundary: without it XLA may fuse the unrolled
+        # blocks and reassociate degenerate (S=1) dots, breaking the
+        # bitwise-equal-to-scan contract the scheduled backends share.
+        carry = jax.lax.optimization_barrier(carry)
+    return carry
+
+
+@register_backend("blocked", policies="*",
+                  description="lax.scan over blocks; jit-friendly "
+                              "CPU/GPU default")
+def _run_blocked(values, segment_ids, num_segments, *, policy: Policy,
+                 block_size: int = 512, interpret: Optional[bool] = None):
+    vb, ib, nb = _pad_to_blocks(values, segment_ids, block_size)
+
+    def step(carry, blk):
+        vals, ids = blk
+        contrib = _block_contrib(vals, ids, num_segments, policy.acc_dtype)
+        return policy.update(carry, contrib), None
+
+    carry0 = policy.init(num_segments, values.shape[1])
+    carry, _ = jax.lax.scan(step, carry0, (vb, ib))
+    return carry
+
+
+@register_backend("pallas", policies=("fast", "compensated", "exact"),
+                  description="TPU Pallas kernel (interpret off-TPU) with "
+                              "VMEM-budget label-space tiling")
+def _run_pallas(values, segment_ids, num_segments, *, policy: Policy,
+                block_size: int = 512, interpret: Optional[bool] = None):
+    from repro.kernels import jugglepac_segsum as _ss
+    from repro.kernels.ops import seg_tile_for
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    d = values.shape[1]
+    # same padding contract as every backend, flattened back for the grid
+    vb, ib, _ = _pad_to_blocks(values, segment_ids, block_size)
+    values = vb.reshape(-1, d)
+    segment_ids = ib.reshape(-1)
+    # VMEM-budget label tiling, shared with kernels.ops.segment_sum
+    seg_tile = seg_tile_for(num_segments, d)
+    parts = []
+    for off in range(0, num_segments, seg_tile):
+        s = min(seg_tile, num_segments - off)
+        parts.append(_ss.segsum_policy_pallas(
+            values, segment_ids, s, policy=policy.name,
+            carry_len=policy.carry_len, block_rows=block_size,
+            seg_offset=off, interpret=interpret))
+    if len(parts) == 1:
+        return parts[0]
+    return tuple(jnp.concatenate([p[i] for p in parts], axis=0)
+                 for i in range(policy.carry_len))

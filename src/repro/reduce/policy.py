@@ -1,0 +1,149 @@
+"""Accuracy policies — the first-class knob of ``repro.reduce``.
+
+JugglePAC's fixed-pairing argument says *what order* additions happen in;
+the policy says *in what domain* they happen.  Three tiers, all sharing the
+same block schedule (so a policy swap never changes the data movement):
+
+  * ``fast``         — plain f32 accumulation over the fixed block tree.
+    Deterministic (the schedule depends only on shapes), O(log n) error
+    growth, zero overhead.
+  * ``compensated``  — Kahan/two-sum carried across blocks: the (S, D)
+    accumulator travels with an equally-shaped compensation term that
+    captures every cross-block rounding error.  ~f64 accuracy at f32 cost.
+  * ``exact``        — INTAC: quantize once to a shared power-of-two scale,
+    accumulate in int32 (associative => bitwise identical for *any* block
+    size, backend, or device layout), dequantize once per reduction — the
+    paper's "pay for normalization once per set".
+
+A policy owns three hooks, each pure and shape-polymorphic:
+
+  ``prepare(values, num_terms)``      -> (domain_values, ctx)
+  ``init / update``                   -> the per-block carry (a tuple of
+                                         (S, D) arrays all backends thread
+                                         identically; the pallas backend
+                                         bakes ``update`` into its kernel)
+  ``finalize(carry, ctx)``            -> (S, D) f32
+
+New tiers (e.g. Neal superaccumulators, exponent-indexed procrastination)
+register with ``@register_policy`` and immediately work on the ``ref`` and
+``blocked`` backends; the ``pallas`` backend advertises the policies its
+kernels implement via its capability flags.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.intac import choose_scale, dequantize, quantize
+
+POLICIES: Dict[str, "Policy"] = {}
+
+
+def register_policy(cls):
+    """Class decorator: instantiate and add to the policy registry."""
+    inst = cls()
+    POLICIES[inst.name] = inst
+    return cls
+
+
+def get_policy(name: str) -> "Policy":
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; registered: "
+                         f"{sorted(POLICIES)}") from None
+
+
+def two_sum(a: jnp.ndarray, b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Knuth two-sum: s = fl(a+b) and the exact rounding error e.
+
+    a + b == s + e exactly, with no magnitude precondition.  The backends
+    must execute these six ops in this order — the error term is the whole
+    point, so the expression must never be algebraically simplified.
+    """
+    s = a + b
+    bp = s - a
+    e = (a - (s - bp)) + (b - bp)
+    return s, e
+
+
+class Policy:
+    """Base accuracy policy.  Subclasses set ``name`` and override hooks."""
+
+    name: str = "?"
+    #: number of carry arrays threaded through the block schedule
+    carry_len: int = 1
+    #: dtype the backends accumulate in (drives kernel specialization)
+    acc_dtype = jnp.float32
+
+    def prepare(self, values: jnp.ndarray, num_terms: int):
+        """Map raw (N, D) values into the accumulation domain.
+
+        Returns (domain_values, ctx); ctx is passed back to ``finalize``.
+        """
+        return values.astype(jnp.float32), None
+
+    def init(self, num_segments: int, d: int):
+        return (jnp.zeros((num_segments, d), self.acc_dtype),)
+
+    def update(self, carry, contrib):
+        return (carry[0] + contrib,)
+
+    def finalize(self, carry, ctx) -> jnp.ndarray:
+        return carry[0]
+
+
+@register_policy
+class FastPolicy(Policy):
+    """f32 accumulation over the fixed block tree (the default)."""
+
+    name = "fast"
+
+
+@register_policy
+class CompensatedPolicy(Policy):
+    """Kahan/two-sum compensated cross-block accumulation."""
+
+    name = "compensated"
+    carry_len = 2
+
+    def init(self, num_segments: int, d: int):
+        z = jnp.zeros((num_segments, d), jnp.float32)
+        return (z, z)
+
+    def update(self, carry, contrib):
+        acc, comp = carry
+        s, e = two_sum(acc, contrib)
+        return (s, comp + e)
+
+    def finalize(self, carry, ctx) -> jnp.ndarray:
+        acc, comp = carry
+        return acc + comp
+
+
+@register_policy
+class ExactPolicy(Policy):
+    """INTAC fixed point: int32 accumulation, one dequantize per reduction.
+
+    ``prepare`` picks a shared power-of-two scale sized so the *entire*
+    stream fits int32 headroom (the paper's a-priori bit-width step), so no
+    partial sum can overflow anywhere in the schedule.  Integer addition is
+    associative — the result is bitwise independent of backend, block size,
+    and device layout.
+    """
+
+    name = "exact"
+    acc_dtype = jnp.int32
+
+    def prepare(self, values: jnp.ndarray, num_terms: int):
+        v = values.astype(jnp.float32)
+        scale = choose_scale(jnp.max(jnp.abs(v)), max(num_terms, 1))
+        return quantize(v, scale), scale
+
+    def init(self, num_segments: int, d: int):
+        return (jnp.zeros((num_segments, d), jnp.int32),)
+
+    def finalize(self, carry, ctx) -> jnp.ndarray:
+        return dequantize(carry[0], ctx)

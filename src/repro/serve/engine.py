@@ -5,7 +5,12 @@ A deliberately small but real engine:
   * one shared prefill (padded to the longest prompt in the batch, left
     padding via per-request lengths) builds the caches;
   * lock-step decode with per-request stopping (eos or max_new_tokens);
-  * greedy or temperature sampling with a seeded key per request.
+  * greedy or temperature sampling with a seeded key per request;
+  * per-request mean log-probability of the generated tokens, computed as
+    one ``repro.reduce`` segmented mean: requests are the paper's
+    variable-length sets (they stop at different steps), and steps where a
+    request is already done carry the ``OUT_OF_RANGE_LABEL`` sentinel so
+    they drop out of both sum and count.
 
 The decode step is the same function the multi-pod dry-run lowers — on a
 real pod it runs sharded; here it runs on CPU for the examples/tests.
@@ -20,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import reduce as _reduce
 from repro.models import (decode_step, encode, forward, init_caches,
                           pad_caches_to)
 from repro.models.config import ModelConfig
@@ -37,6 +43,7 @@ class Request:
 class Result:
     tokens: List[int]
     prompt_len: int
+    mean_logprob: Optional[float] = None
 
 
 class Engine:
@@ -71,16 +78,28 @@ class Engine:
         done = np.zeros(bsz, bool)
         max_new = max(r.max_new_tokens for r in requests)
         position = pmax
-        cur = self._sample(logits, requests)
-        for i in range(bsz):
-            out[i].append(int(cur[i, 0]))
+        cur, lp = self._sample(logits, requests)
+        lp_chunks = [np.asarray(lp)]
+        id_chunks = [np.arange(bsz, dtype=np.int32)]
+        for i, r in enumerate(requests):
+            t = int(cur[i, 0])
+            out[i].append(t)
+            if (r.eos_id is not None and t == r.eos_id) or \
+                    r.max_new_tokens <= 1:
+                done[i] = True
 
         for step in range(1, max_new):
             if bool(done.all()) or position >= self.max_len - 1:
                 break
             logits, caches = self._decode(self.params, cur, caches,
                                           jnp.int32(position))
-            cur = self._sample(logits, requests)
+            cur, lp = self._sample(logits, requests)
+            # a step only counts toward a request still generating; done
+            # slots get the sentinel and vanish from the segmented mean
+            id_chunks.append(np.where(~done, np.arange(bsz),
+                                      _reduce.OUT_OF_RANGE_LABEL)
+                             .astype(np.int32))
+            lp_chunks.append(np.asarray(lp))
             position += 1
             for i, r in enumerate(requests):
                 if done[i]:
@@ -91,13 +110,31 @@ class Engine:
                         len(out[i]) - plens[i] >= r.max_new_tokens:
                     done[i] = True
 
-        return [Result(tokens=o, prompt_len=p) for o, p in zip(out, plens)]
+        # per-request mean logprob: one segmented mean over the flat
+        # (steps x batch) stream — requests are variable-length sets.
+        # Pad to the (max_new, bsz) shape so the jitted reduce dispatch
+        # compiles per batch composition (max_new_tokens x batch size),
+        # not per data-dependent early-stop step count; padded steps
+        # carry the sentinel.
+        while len(lp_chunks) < max_new:
+            lp_chunks.append(np.zeros(bsz, np.float32))
+            id_chunks.append(np.full(bsz, _reduce.OUT_OF_RANGE_LABEL,
+                                     np.int32))
+        mean_lp = _reduce.reduce(
+            jnp.asarray(np.concatenate(lp_chunks)),
+            segment_ids=jnp.asarray(np.concatenate(id_chunks)),
+            num_segments=bsz, op="mean", policy="compensated")
+        return [Result(tokens=o, prompt_len=p, mean_logprob=float(m))
+                for o, p, m in zip(out, plens, np.asarray(mean_lp))]
 
-    def _sample(self, logits, requests) -> jnp.ndarray:
+    def _sample(self, logits, requests):
+        """Returns (token (B, 1) int32, logprob-of-token (B,) f32)."""
         self.key, sub = jax.random.split(self.key)
         temps = jnp.asarray([[max(r.temperature, 0.0)] for r in requests])
         greedy = jnp.argmax(logits[:, -1, :self.cfg.vocab], axis=-1)
         scaled = logits[:, -1, :self.cfg.vocab] / jnp.maximum(temps, 1e-6)
         sampled = jax.random.categorical(sub, scaled, axis=-1)
         tok = jnp.where(temps[:, 0] > 0, sampled, greedy)
-        return tok[:, None].astype(jnp.int32)
+        logp = jax.nn.log_softmax(logits[:, -1, :self.cfg.vocab], axis=-1)
+        lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+        return tok[:, None].astype(jnp.int32), lp.astype(jnp.float32)

@@ -30,10 +30,10 @@ def make_train_step(cfg: ModelConfig, *, lr_fn: Callable,
                     logits_pspec=None, num_microbatches: int = 1):
     """num_microbatches > 1: the batch splits along dim 0 and gradients
     accumulate through the JugglePAC binary-counter pairing tree
-    (core.juggler) — activation memory scales down by the microbatch count
-    while only O(log m) gradient copies stay live, and the fixed pairing
-    schedule keeps the result independent of the grouping."""
-    from repro.core import juggler
+    (repro.reduce.TreeAccumulator) — activation memory scales down by the
+    microbatch count while only O(log m) gradient copies stay live, and the
+    fixed pairing schedule keeps the result independent of the grouping."""
+    from repro import reduce as _reduce
 
     def grad_fn(p, b):
         def loss_wrap(pp):
@@ -49,7 +49,7 @@ def make_train_step(cfg: ModelConfig, *, lr_fn: Callable,
                 lambda x: x.reshape(
                     (num_microbatches, x.shape[0] // num_microbatches)
                     + x.shape[1:]), batch)
-            grads, (losses, metricses) = juggler.accumulate_microbatch_grads(
+            grads, (losses, metricses) = _reduce.accumulate_microbatch_grads(
                 grad_fn, params, mbs, num_microbatches=num_microbatches,
                 mean=True)
             loss = jnp.mean(losses)

@@ -1,4 +1,50 @@
+import sys
+import types
+
 import pytest
+
+
+# ---------------------------------------------------------------------------
+# Optional-dependency guard: the suite must collect and run everywhere.
+#
+# Property tests use hypothesis; when it is absent we install a minimal
+# stub so `from hypothesis import given, settings, strategies as st` still
+# imports, and every @given-decorated test is collected as *skipped*
+# (plain tests in the same modules run normally).
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    def _given_stub(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed; property test skipped"
+            )(fn)
+        return deco
+
+    def _settings_stub(*_args, **_kwargs):
+        if _args and callable(_args[0]) and len(_args) == 1 and not _kwargs:
+            return _args[0]              # bare @settings usage
+        return lambda fn: fn
+
+    def _strategy_stub(*_args, **_kwargs):
+        return None
+
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name in ("integers", "floats", "booleans", "lists", "tuples",
+                  "sampled_from", "text", "composite", "just", "one_of"):
+        setattr(_st, _name, _strategy_stub)
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given_stub
+    _hyp.settings = _settings_stub
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(too_slow=None,
+                                             data_too_large=None)
+    _hyp.__stub__ = True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 def pytest_addoption(parser):

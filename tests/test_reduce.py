@@ -1,0 +1,371 @@
+"""repro.reduce front-door tests.
+
+The core contract under test: one call, and the (policy x backend) grid is
+*consistent* — every backend executes the identical block schedule, so for
+a given policy all backends agree bitwise; the exact policy additionally
+agrees bitwise under input permutation.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import reduce as R
+from repro.core import intac, segmented
+from repro.kernels import ops
+
+BACKENDS = ("ref", "blocked", "pallas")
+POLICIES = ("fast", "compensated", "exact")
+
+
+def _data(n, d, s, dtype, seed=0):
+    rng = np.random.RandomState(seed)
+    vals = jnp.asarray(rng.randn(n, d).astype(np.float32)).astype(dtype)
+    ids = jnp.asarray(rng.randint(0, s, n))
+    return vals, ids
+
+
+def _scatter64(vals, ids, s):
+    out = np.zeros((s,) + np.asarray(vals).shape[1:])
+    np.add.at(out, np.asarray(ids), np.asarray(vals, np.float64))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cross-backend equivalence: segmented/unsegmented x dtype x policy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_segmented_backends_bitwise_equal(policy, dtype):
+    vals, ids = _data(700, 32, 9, dtype)
+    outs = [np.asarray(R.reduce(vals, segment_ids=ids, num_segments=9,
+                                policy=policy, backend=b, block_size=128))
+            for b in BACKENDS]
+    for o in outs[1:]:
+        assert np.array_equal(outs[0], o)          # bitwise, not allclose
+    tol = 1e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        outs[0], _scatter64(vals.astype(jnp.float32), ids, 9),
+        atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("policy", POLICIES)
+def test_unsegmented_backends_bitwise_equal(policy, dtype):
+    vals, _ = _data(500, 16, 1, dtype, seed=3)
+    outs = [np.asarray(R.reduce(vals, policy=policy, backend=b,
+                                block_size=128)) for b in BACKENDS]
+    assert outs[0].shape == (16,)
+    for o in outs[1:]:
+        assert np.array_equal(outs[0], o)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_mean_op_matches_oracle(policy):
+    vals, ids = _data(400, 8, 5, jnp.float32, seed=4)
+    out = R.reduce(vals, segment_ids=ids, num_segments=5, op="mean",
+                   policy=policy)
+    s64 = _scatter64(vals, ids, 5)
+    c64 = _scatter64(jnp.ones((400,)), ids, 5)[:, None]
+    np.testing.assert_allclose(np.asarray(out), s64 / np.maximum(c64, 1),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_exact_policy_permutation_invariant():
+    x = jnp.asarray(np.random.RandomState(5).randn(4096).astype(np.float32))
+    perm = np.random.RandomState(6).permutation(4096)
+    a = float(R.reduce(x, policy="exact"))
+    b = float(R.reduce(x[perm], policy="exact"))
+    assert a == b                                  # bitwise
+
+
+def test_exact_policy_tiny_magnitude_stream():
+    """Near-clamp scales (max|x| ~ 1e-38) must not collapse to zero: the
+    scale clamps to 2^127 and the descale must avoid subnormal
+    intermediates (reciprocal or single-step 2^-127 both flush on CPU)."""
+    v = jnp.asarray([[2e-38], [2e-38]])
+    for b in BACKENDS:
+        out = float(R.reduce(v, policy="exact", backend=b)[0])
+        assert abs(out - 4e-38) < 6e-39      # within one quantum of 2^-127
+
+
+def test_compensated_beats_fast_on_ill_conditioned():
+    rng = np.random.RandomState(7)
+    x = (rng.randn(1 << 15) * 10 ** rng.uniform(-4, 4, 1 << 15)) \
+        .astype(np.float32)
+    exact = float(np.sum(x.astype(np.float64)))
+    e_fast = abs(float(R.reduce(jnp.asarray(x))) - exact)
+    e_comp = abs(float(R.reduce(jnp.asarray(x), policy="compensated"))
+                 - exact)
+    assert e_comp <= e_fast * 1.0 + 1e-12
+
+
+def test_1d_values_and_scalar_result():
+    x = jnp.arange(11, dtype=jnp.float32)
+    assert float(R.reduce(x)) == 55.0
+    seg = R.reduce(x, segment_ids=jnp.asarray([0] * 5 + [1] * 6),
+                   num_segments=2)
+    assert seg.shape == (2,)
+    np.testing.assert_allclose(np.asarray(seg), [10.0, 45.0])
+
+
+# ---------------------------------------------------------------------------
+# sentinel + mean masking
+# ---------------------------------------------------------------------------
+
+
+def test_out_of_range_label_drops_rows_everywhere():
+    vals = jnp.asarray([[1.0], [2.0], [4.0], [8.0]])
+    ids = jnp.asarray([0, R.OUT_OF_RANGE_LABEL, 1, 99])   # 99 also invalid
+    for b in BACKENDS:
+        out = R.reduce(vals, segment_ids=ids, num_segments=2, backend=b)
+        np.testing.assert_allclose(np.asarray(out)[:, 0], [1.0, 4.0])
+    # the scatter oracle follows the same convention (negatives must not
+    # wrap into the last segment)
+    ref = segmented.segment_sum_ref(vals, ids, 2)
+    np.testing.assert_allclose(np.asarray(ref)[:, 0], [1.0, 4.0])
+
+
+def test_dropped_rows_cannot_poison_exact_scale():
+    """A sentinel-labeled row's payload must not influence the exact
+    policy's quantization scale for the rows that are kept."""
+    out = R.reduce(jnp.asarray([[1.0], [1e30]]),
+                   segment_ids=jnp.asarray([0, R.OUT_OF_RANGE_LABEL]),
+                   num_segments=1, policy="exact")
+    assert float(out[0, 0]) == 1.0
+
+
+def test_mean_counts_only_in_range_rows():
+    vals = jnp.asarray([2.0, 4.0, 100.0])
+    ids = jnp.asarray([0, 0, R.OUT_OF_RANGE_LABEL])
+    out = R.reduce(vals, segment_ids=ids, num_segments=1, op="mean")
+    assert float(out[0]) == 3.0
+
+
+def test_segment_mean_honors_impl_and_valid():
+    vals = jnp.asarray([[1.0], [3.0], [10.0], [50.0]])
+    ids = jnp.asarray([0, 0, 1, 1])
+    valid = jnp.asarray([True, True, True, False])
+    calls = []
+
+    def impl(v, i, n):
+        calls.append(v.shape)
+        return R.reduce(v, segment_ids=i, num_segments=n, backend="blocked")
+
+    out = segmented.segment_mean(vals, ids, 2, impl=impl, valid=valid)
+    np.testing.assert_allclose(np.asarray(out)[:, 0], [2.0, 10.0])
+    assert len(calls) == 2                 # sum AND count went through impl
+
+
+# ---------------------------------------------------------------------------
+# spec, registries, errors
+# ---------------------------------------------------------------------------
+
+
+def test_reduce_module_is_callable_front_door():
+    x = jnp.arange(4, dtype=jnp.float32)
+    assert float(repro.reduce(x)) == 6.0
+
+
+def test_spec_reuse_and_replace():
+    spec = R.ReduceSpec(op="mean", policy="compensated", backend="blocked")
+    vals, ids = _data(64, 4, 3, jnp.float32, seed=9)
+    a = R.reduce(vals, segment_ids=ids, num_segments=3, spec=spec)
+    b = R.reduce(vals, segment_ids=ids, num_segments=3, op="mean",
+                 policy="compensated", backend="blocked")
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert spec.replace(op="sum").op == "sum"
+    assert hash(spec) == hash(R.ReduceSpec(op="mean", policy="compensated",
+                                           backend="blocked"))
+
+
+def test_registries_and_errors():
+    assert set(BACKENDS) <= set(R.BACKENDS)
+    assert set(POLICIES) <= set(R.POLICIES)
+    with pytest.raises(ValueError):
+        R.ReduceSpec(op="median")
+    with pytest.raises(ValueError):
+        R.ReduceSpec(policy="psychic")
+    with pytest.raises(ValueError):
+        R.ReduceSpec(backend="abacus")
+    with pytest.raises(ValueError):
+        R.reduce(jnp.ones((4,)), segment_ids=jnp.zeros((4,), jnp.int32))
+    with pytest.raises(ValueError):
+        R.reduce(jnp.ones((4,)), num_segments=2)   # ids missing
+    # every backend reports wildcard/explicit capabilities correctly
+    assert all(R.get_backend(b).supports(R.get_policy(p))
+               for b in BACKENDS for p in POLICIES)
+
+
+def test_empty_stream_is_identity_on_all_backends():
+    for b in BACKENDS:
+        out = R.reduce(jnp.zeros((0, 4)), backend=b)
+        assert np.array_equal(np.asarray(out), np.zeros(4))
+        m = R.reduce(jnp.zeros((0,)), segment_ids=jnp.zeros((0,), jnp.int32),
+                     num_segments=3, op="mean", backend=b)
+        assert np.array_equal(np.asarray(m), np.zeros(3))
+
+
+def test_register_backend_extension_point():
+    @R.register_backend("test_double", policies=("fast",),
+                        description="test-only")
+    def _run(values, ids, n, *, policy, block_size=512, interpret=None):
+        carry = R.get_backend("blocked").run(
+            values, ids, n, policy=policy, block_size=block_size)
+        return tuple(2 * c for c in carry)
+    try:
+        x = jnp.arange(4, dtype=jnp.float32)
+        assert float(R.reduce(x, backend="test_double")) == 12.0
+    finally:
+        del R.BACKENDS["test_double"]
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims forward correctly
+# ---------------------------------------------------------------------------
+
+
+def test_segment_sum_blocked_shim_forwards():
+    vals, ids = _data(300, 8, 4, jnp.float32, seed=11)
+    with pytest.deprecated_call():
+        old = segmented.segment_sum_blocked(vals, ids, 4, block_size=64)
+    new = R.reduce(vals, segment_ids=ids, num_segments=4,
+                   backend="blocked", block_size=64)
+    assert np.array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_intac_sum_exact_shim_forwards():
+    vals = jnp.asarray(
+        np.random.RandomState(12).randn(256, 8).astype(np.float32))
+    with pytest.deprecated_call():
+        old = ops.intac_sum_exact(vals, jnp.float32(2.0 ** 16))
+    new = R.reduce(vals, policy="exact")
+    np.testing.assert_allclose(np.asarray(old), np.asarray(new), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Accumulator protocol
+# ---------------------------------------------------------------------------
+
+
+def test_protocol_instances_are_accumulators():
+    for acc in (R.TreeAccumulator(4), R.KahanAccumulator(),
+                R.LimbAccumulator(2.0 ** 16), R.FlashAccumulator()):
+        assert isinstance(acc, R.Accumulator)
+
+
+def test_tree_accumulator_push_merge_finalize():
+    rng = np.random.RandomState(13)
+    gs = [jnp.asarray(rng.randn(6).astype(np.float32)) for _ in range(11)]
+    acc = R.TreeAccumulator.for_count(11)
+    st = acc.init(gs[0])
+    for g in gs[:6]:
+        st = acc.push(st, g)
+    st2 = acc.init(gs[0])
+    for g in gs[6:]:
+        st2 = acc.push(st2, g)
+    merged = acc.merge(st, st2)
+    assert int(merged.count) == 11
+    np.testing.assert_allclose(np.asarray(acc.finalize(merged)),
+                               sum(np.asarray(g) for g in gs), atol=1e-5)
+
+
+def test_kahan_accumulator_scan_and_merge():
+    rng = np.random.RandomState(14)
+    xs = jnp.asarray((rng.randn(512, 3) * 10 ** rng.uniform(-3, 3, (512, 1)))
+                     .astype(np.float32))
+    acc = R.KahanAccumulator()
+    total = R.scan_accumulate(acc, xs)
+    exact = np.sum(np.asarray(xs, np.float64), axis=0)
+    assert np.abs(np.asarray(total) - exact).max() <= \
+        np.abs(np.asarray(jnp.sum(xs, 0)) - exact).max() + 1e-6
+    halves = [acc.init(xs[0]), acc.init(xs[0])]
+    for i, x in enumerate(xs):
+        halves[i % 2] = acc.push(halves[i % 2], x)
+    merged = acc.finalize(R.merge_tree(acc, halves))
+    np.testing.assert_allclose(np.asarray(merged), exact, atol=1e-3)
+
+
+def test_limb_accumulator_matches_core_and_is_exact():
+    rng = np.random.RandomState(15)
+    xs = [jnp.asarray(rng.randn(8).astype(np.float32)) for _ in range(64)]
+    acc = R.LimbAccumulator(2.0 ** 16)
+    a = acc.init(xs[0])
+    b = acc.init(xs[0])
+    for x in xs[:32]:
+        a = acc.push(a, x)
+    for x in xs[32:]:
+        b = acc.push(b, x)
+    merged = np.asarray(acc.finalize(acc.merge(a, b)))
+    direct = intac.limb_init((8,), 2.0 ** 16)
+    for x in xs:
+        direct = intac.limb_add(direct, x)
+    assert np.array_equal(merged, np.asarray(intac.limb_finalize(direct)))
+
+
+def test_flash_accumulator_streams_softmax():
+    rng = np.random.RandomState(16)
+    nshards, g, d, s = 6, 4, 16, 32
+    q = rng.randn(g, d).astype(np.float32)
+    k = rng.randn(nshards, s, d).astype(np.float32)
+    v = rng.randn(nshards, s, d).astype(np.float32)
+    acc = R.FlashAccumulator()
+    state = acc.init((jnp.zeros((g,)), jnp.zeros((g,)),
+                      jnp.zeros((g, d))))
+    for i in range(nshards):
+        sc = q @ k[i].T
+        m = sc.max(-1)
+        p = np.exp(sc - m[:, None])
+        state = acc.push(state, (jnp.asarray(m), jnp.asarray(p.sum(-1)),
+                                 jnp.asarray(p @ v[i])))
+    out = np.asarray(acc.finalize(state))
+    kk, vv = k.reshape(-1, d), v.reshape(-1, d)
+    sc = q @ kk.T
+    p = np.exp(sc - sc.max(-1, keepdims=True))
+    ref = (p / p.sum(-1, keepdims=True)) @ vv
+    np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+def test_accumulate_microbatch_grads_front_door():
+    def grad_fn(p, mb):
+        return jax.tree.map(lambda x: mb["x"].sum() * jnp.ones_like(x), p), \
+            jnp.float32(0.0)
+    params = {"w": jnp.zeros((3,))}
+    mbs = {"x": jnp.arange(8, dtype=jnp.float32).reshape(4, 2)}
+    g, _ = R.accumulate_microbatch_grads(
+        grad_fn, params, mbs, num_microbatches=4, mean=True)
+    np.testing.assert_allclose(np.asarray(g["w"]), np.full(3, 28.0 / 4))
+
+
+# ---------------------------------------------------------------------------
+# collective policies (single-device mesh: policy plumbing + math parity)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", R.COLLECTIVE_POLICIES)
+def test_collective_mean_policies_single_device(policy):
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    x = jnp.asarray(np.random.RandomState(17).randn(8).astype(np.float32))
+
+    def f(v):
+        m, r = R.collective_mean(v, ("data",), policy=policy, bits=8)
+        return m, r
+
+    m, r = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                     check_rep=False)(x)
+    tol = 0.05 if policy == "compensated" else 1e-5   # 8-bit payload
+    np.testing.assert_allclose(np.asarray(m), np.asarray(x),
+                               atol=tol * max(1.0, float(jnp.abs(x).max())))
+    if policy == "compensated":
+        # error feedback: residual holds exactly what quantization dropped
+        np.testing.assert_allclose(np.asarray(m + r), np.asarray(x),
+                                   atol=1e-6)

@@ -49,6 +49,26 @@ def test_greedy_matches_single_vs_batch(engine):
     assert alone == batched
 
 
+def test_mean_logprob_batched_matches_alone(engine):
+    """mean_logprob is a per-request segmented mean over variable-length
+    generations: for a greedy request it must not depend on batchmates
+    with different lengths (done steps carry the sentinel)."""
+    target = Request(prompt=[21, 22, 23], max_new_tokens=3, temperature=0.0)
+    other = Request(prompt=[4], max_new_tokens=7, temperature=0.0)
+    alone = engine.generate([target])[0]
+    batched = engine.generate([target, other])[0]
+    assert alone.mean_logprob is not None
+    assert np.isfinite(alone.mean_logprob)
+    assert np.isclose(alone.mean_logprob, batched.mean_logprob, atol=1e-5)
+
+
+def test_max_new_tokens_one_yields_one_token(engine):
+    res = engine.generate([Request(prompt=[5, 6, 7], max_new_tokens=1),
+                           Request(prompt=[9], max_new_tokens=6)])
+    assert len(res[0].tokens) - res[0].prompt_len == 1
+    assert len(res[1].tokens) - res[1].prompt_len == 6
+
+
 def test_eos_stops(engine):
     # find whatever greedy emits first, then use it as eos
     probe = engine.generate([Request(prompt=[5, 5, 5], max_new_tokens=1,
