@@ -151,21 +151,23 @@ def table5_intac(rows):
                  f"fp32_serial_changes_by={abs(float(acc2 - acc)):.3e}"))
 
 
-def table6_reduce_policies(rows):
+def table6_reduce_policies(rows, *, smoke: bool = False):
     """repro.reduce accuracy/latency sweep: the policy knob quantified.
 
-    One ill-conditioned segmented stream, every accuracy policy on the
-    jit-friendly blocked backend: abs error vs f64 and host wall time.
+    One ill-conditioned segmented stream, every registered accuracy
+    policy on the jit-friendly blocked backend: abs error vs f64 and host
+    wall time.  ``smoke`` shrinks the stream so CI can assert the whole
+    five-tier sweep stays runnable in seconds.
     """
     rng = np.random.RandomState(7)
-    n, d, s = 1 << 14, 64, 32
+    n, d, s = (1 << 10, 16, 8) if smoke else (1 << 14, 64, 32)
     x = (rng.randn(n, d) * 10 ** rng.uniform(-3, 3, (n, 1))) \
         .astype(np.float32)
     ids = np.sort(rng.randint(0, s, n))
     exact64 = np.zeros((s, d))
     np.add.at(exact64, ids, x.astype(np.float64))
     vals, jids = jnp.asarray(x), jnp.asarray(ids)
-    for pol in ("fast", "compensated", "exact"):
+    for pol in ("fast", "compensated", "exact", "exact2", "procrastinate"):
         fn = jax.jit(lambda v, i, p=pol: repro.reduce(
             v, segment_ids=i, num_segments=s, policy=p, backend="blocked"))
         us = _time(fn, vals, jids)
@@ -173,3 +175,24 @@ def table6_reduce_policies(rows):
         rows.append((f"table6_reduce_{pol}_us", us,
                      f"max_abs_err_vs_f64={err:.3e} "
                      f"({n}x{d} rows, {s} segments, blocked backend)"))
+
+
+def table6b_large_n_resolution(rows, *, smoke: bool = False):
+    """The shrinking-scale defect quantified: error vs f64 at growing N.
+
+    Single-limb ``exact`` loses resolution as 1/N; ``exact2`` and
+    ``procrastinate`` hold a flat error floor (the tentpole claim of the
+    two-limb / exponent-bin tiers).
+    """
+    rng = np.random.RandomState(11)
+    sizes = (1 << 12,) if smoke else (1 << 12, 1 << 16, 1 << 20)
+    for n in sizes:
+        x = rng.randn(n).astype(np.float32)
+        ref = float(np.sum(x.astype(np.float64)))
+        xj = jnp.asarray(x)
+        errs = []
+        for pol in ("exact", "exact2", "procrastinate"):
+            out = float(repro.reduce(xj, policy=pol, backend="blocked"))
+            errs.append(f"{pol}={abs(out - ref):.3e}")
+        rows.append((f"table6b_resolution_n{n}", n,
+                     "abs_err_vs_f64: " + " ".join(errs)))

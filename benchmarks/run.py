@@ -5,7 +5,7 @@ cycle-accurate simulators (the paper's own metrics); wall-clock numbers are
 CPU-host timings of the production JAX layer (relative comparisons only —
 TPU roofline projections live in benchmarks/roofline.py).
 
-    PYTHONPATH=src python -m benchmarks.run [--with-roofline]
+    PYTHONPATH=src python -m benchmarks.run [--with-roofline] [--smoke]
 """
 
 from __future__ import annotations
@@ -21,14 +21,23 @@ def main(argv=None) -> None:
     ap.add_argument("--with-roofline", action="store_true",
                     help="also rebuild the roofline table from "
                          "experiments/dryrun")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI subset: the schedule table and the "
+                         "full five-policy sweep at reduced sizes")
     args = ap.parse_args(argv)
 
     rows = []
-    paper_tables.table1_schedule(rows)
-    paper_tables.table2_pis_registers(rows)
-    paper_tables.table3_accumulator_comparison(rows)
-    paper_tables.table5_intac(rows)
-    paper_tables.table6_reduce_policies(rows)
+    if args.smoke:
+        paper_tables.table1_schedule(rows)
+        paper_tables.table6_reduce_policies(rows, smoke=True)
+        paper_tables.table6b_large_n_resolution(rows, smoke=True)
+    else:
+        paper_tables.table1_schedule(rows)
+        paper_tables.table2_pis_registers(rows)
+        paper_tables.table3_accumulator_comparison(rows)
+        paper_tables.table5_intac(rows)
+        paper_tables.table6_reduce_policies(rows)
+        paper_tables.table6b_large_n_resolution(rows)
 
     print("name,value,derived")
     for name, val, derived in rows:

@@ -11,22 +11,23 @@ Faithful layer:
 Production (TPU-native) layer:
   trees        fixed pairing-tree reduction schedules
   segmented    segmented-reduction math oracle + flash-partial combines
-               (the blocked schedule itself lives in repro.reduce.backends;
-               segment_sum_blocked remains as a deprecation shim)
-  intac        exact integer-domain accumulation + deterministic /
-               compressed collectives (surfaced as reduce policies)
+               (the blocked schedule itself lives in repro.reduce.backends)
+  intac        exact integer-domain accumulation — limbs, exponent bins —
+               + deterministic / compressed collectives (surfaced as
+               reduce policies)
   juggler      bounded-slot streaming gradient accumulation (surfaced as
                repro.reduce.TreeAccumulator)
 """
 
 from . import circuit, circuit_jax, intac, juggler, segmented, trees  # noqa: F401
 from .circuit import INTAC, JugglePAC, jugglepac_min_set_size  # noqa: F401
-from .intac import (compressed_psum_mean, compressed_psum_mean_tree,  # noqa: F401
-                    intac_psum, intac_sum, limb_add, limb_finalize,
-                    limb_init, limb_merge)
-from .juggler import (accumulate_microbatch_grads, juggler_finalize,  # noqa: F401
-                      juggler_init, juggler_push, num_slots_for)
+from .intac import (bin_psum, compressed_psum_mean,  # noqa: F401
+                    compressed_psum_mean_tree, intac_psum, intac_psum2,
+                    intac_sum, limb_add, limb_finalize, limb_init,
+                    limb_merge)
+from .juggler import (juggler_finalize, juggler_init,  # noqa: F401
+                      juggler_push, num_slots_for)
 from .segmented import (combine_flash_partials_tree, flash_partial_combine,  # noqa: F401
-                        segment_mean, segment_sum_blocked, segment_sum_ref,
+                        segment_mean, segment_sum_ref,
                         segments_from_lengths)
 from .trees import pairwise_tree_sum, pairwise_tree_sum_pytree, tree_combine  # noqa: F401

@@ -18,7 +18,13 @@ the TPU answer to the paper's FP non-associativity problem, and the basis of:
   * ``LimbAccumulator``     — two-limb int32 carry-save accumulator (wider
                               dynamic range, deferred carries; the closest
                               software analogue of (sum, carry) feedback);
-  * ``intac_psum``          — deterministic cross-device reduction;
+  * ``bin_split/combine``   — exponent-indexed "procrastination" bins
+                              (Liguori/Neal): per-element exact digit
+                              split, all rounding deferred to one combine;
+  * ``intac_psum``          — deterministic cross-device reduction (plus
+                              ``intac_psum2`` / ``bin_psum``, the two-limb
+                              and per-bin variants whose resolution does
+                              not shrink with the device count);
   * ``CompressedAllReduce`` — int8/int16-quantized gradient all-reduce with
                               error feedback (the distributed-optimization
                               use of the same primitive).
@@ -35,6 +41,32 @@ import jax.numpy as jnp
 # int32 headroom: values quantized to <= 2^QBITS-1 in magnitude can be
 # accumulated 2^(31-QBITS) times with no overflow.
 _I32_BITS = 31
+
+
+def two_sum(a: jnp.ndarray, b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Knuth two-sum: s = fl(a+b) and the exact rounding error e.
+
+    a + b == s + e exactly, with no magnitude precondition.  Every caller
+    (the compensated policy, the bin-combine finalize) must execute these
+    six ops in this order — the error term is the whole point, so the
+    expression must never be algebraically simplified.
+    """
+    s = a + b
+    bp = s - a
+    e = (a - (s - bp)) + (b - bp)
+    return s, e
+
+
+def _ldexp2(x: jnp.ndarray, e) -> jnp.ndarray:
+    """x * 2^e in two half-exponent ldexp steps.
+
+    A single step materializes 2^e, which over/underflows f32 for |e| near
+    the exponent-range edges even when the *product* is representable;
+    halving keeps every intermediate factor finite.
+    """
+    e = jnp.asarray(e, jnp.int32)
+    h = e // 2
+    return jnp.ldexp(jnp.ldexp(x, h), e - h)
 
 
 def choose_scale(max_abs: jnp.ndarray, num_terms: int,
@@ -62,8 +94,9 @@ def quantize(x: jnp.ndarray, scale) -> jnp.ndarray:
     return jnp.round(x * scale).astype(jnp.int32)
 
 
-def dequantize(q: jnp.ndarray, scale) -> jnp.ndarray:
-    """Descale by ``scale``; exact two-step ldexp for powers of two.
+def descale(xf: jnp.ndarray, scale) -> jnp.ndarray:
+    """Divide an f32 value by ``scale``; exact two-step ldexp for powers
+    of two.
 
     In-repo scales all come from ``choose_scale`` (powers of two): for
     those, two half-exponent ldexp steps replace the division — XLA may
@@ -72,13 +105,16 @@ def dequantize(q: jnp.ndarray, scale) -> jnp.ndarray:
     on CPU; halving the exponent keeps every factor normal and exact.
     Arbitrary external scales fall back to plain division."""
     scale = jnp.asarray(scale, jnp.float32)
-    qf = q.astype(jnp.float32)
+    xf = xf.astype(jnp.float32)
     e = jnp.round(jnp.log2(jnp.maximum(scale, jnp.float32(1e-45)))) \
         .astype(jnp.int32)
-    half = e // 2
-    exact = jnp.ldexp(jnp.ldexp(qf, -half), -(e - half))
+    exact = _ldexp2(xf, -e)
     is_pow2 = jnp.ldexp(jnp.float32(1.0), e) == scale
-    return jnp.where(is_pow2, exact, qf / scale)
+    return jnp.where(is_pow2, exact, xf / scale)
+
+
+def dequantize(q: jnp.ndarray, scale) -> jnp.ndarray:
+    return descale(q.astype(jnp.float32), scale)
 
 
 @partial(jax.jit, static_argnames=("axis",))
@@ -116,27 +152,149 @@ def limb_init(shape, scale) -> LimbState:
     return LimbState(z, z, jnp.asarray(scale, jnp.float32))
 
 
+def limb_split(q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Split an int32 value into (hi, lo) limbs with pure integer ops.
+
+    q == hi * 2^LIMB_SHIFT + lo with lo in [0, 2^LIMB_SHIFT) — the
+    arithmetic right shift floors, so the identity holds for negatives
+    too.  Integer shift/mask, never float divide: a float-domain split
+    would round for quantities above the 24-bit mantissa, silently
+    breaking the exact-within-quantization contract.
+    """
+    q = q.astype(jnp.int32)
+    hi = jnp.right_shift(q, LIMB_SHIFT)
+    lo = jnp.bitwise_and(q, (1 << LIMB_SHIFT) - 1)
+    return hi, lo
+
+
 def limb_add(state: LimbState, x: jnp.ndarray) -> LimbState:
-    """Accumulate one fp32 operand (the 3:2 compressor step)."""
-    q = jnp.round(x * state.scale)
-    hi = jnp.floor(q / (1 << LIMB_SHIFT))
-    lo = q - hi * (1 << LIMB_SHIFT)          # in [0, 2^15)
-    return LimbState(state.hi + hi.astype(jnp.int32),
-                     state.lo + lo.astype(jnp.int32), state.scale)
+    """Accumulate one fp32 operand (the 3:2 compressor step).
+
+    Quantizes to int32 *first* and splits with integer shift/mask — the
+    value must satisfy |x * scale| < 2^31 (the int32 contract).
+    """
+    hi, lo = limb_split(quantize(x, state.scale))
+    return LimbState(state.hi + hi, state.lo + lo, state.scale)
+
+
+def limbs_resolve(hi: jnp.ndarray, lo: jnp.ndarray, scale) -> jnp.ndarray:
+    """Carry-resolve two int32 limbs and descale — the once-per-set final
+    addition (resource-shared adder analogue).
+
+    First canonicalizes in the integer domain (lo's bits above LIMB_SHIFT
+    carry into hi, leaving the unique Euclidean pair with lo in
+    [0, 2^LIMB_SHIFT)), so the f32 conversion of hi sees the same integer
+    no matter how the stream was blocked — the result is bitwise
+    independent of the limb decomposition.  The only floating-point
+    rounding in the whole accumulation happens here.  ``lo`` must be
+    non-negative (it is a sum of per-step remainders in [0, 2^15)).
+    """
+    carry = jnp.right_shift(lo, LIMB_SHIFT)
+    hi = hi + carry
+    lo = jnp.bitwise_and(lo, (1 << LIMB_SHIFT) - 1)
+    total = jnp.ldexp(hi.astype(jnp.float32), LIMB_SHIFT) \
+        + lo.astype(jnp.float32)
+    return descale(total, scale)
 
 
 def limb_finalize(state: LimbState) -> jnp.ndarray:
-    """The once-per-set final addition (resource-shared adder analogue).
-
-    The only floating-point rounding in the whole accumulation happens here.
-    """
-    return (state.hi.astype(jnp.float32) * (1 << LIMB_SHIFT)
-            + state.lo.astype(jnp.float32)) / state.scale
+    return limbs_resolve(state.hi, state.lo, state.scale)
 
 
 def limb_merge(a: LimbState, b: LimbState) -> LimbState:
     """Merging two redundant accumulators is itself exact/associative."""
     return LimbState(a.hi + b.hi, a.lo + b.lo, a.scale)
+
+
+# ---------------------------------------------------------------------------
+# Exponent-indexed bins ("procrastination" accumulation)
+# ---------------------------------------------------------------------------
+#
+# Liguori's procrastination accumulators (arXiv 2406.05866) and Neal's
+# small superaccumulators (arXiv 1505.05571), int32 edition: an f32 value
+# is split — exactly, by Dekker-style extraction — into BIN_BITS-wide
+# signed digits of a fixed-point window anchored at the stream's maximum
+# exponent.  Each digit lands in its own int32 bin; bins add with pure
+# (associative) integer arithmetic, so the accumulation is bitwise
+# order-independent, and all rounding procrastinates to one carry-resolve
+# + compensated combine in ``bin_combine``.
+#
+# Window: NUM_BINS * BIN_BITS = 48 fractional bits below the max
+# exponent, so any value within 2^(48-24) = 2^24 of the maximum splits
+# exactly (full f32 mantissa preserved); smaller values round once, per
+# element, at the 2^-48 quantum — order-independent, and below 1 ulp of
+# the sum whenever the sum itself stays within ~2^24 of the maximum.
+# Under catastrophic cancellation the bound degrades to the absolute
+# N * 2^-49-of-max truncation error, not a relative one.  Headroom:
+# per-element
+# digits are bounded by 2^BIN_BITS, so up to 2^(31-BIN_BITS-1) = 2^22
+# terms accumulate per bin with no overflow, *independent of magnitude* —
+# resolution no longer trades against stream length.
+
+BIN_BITS = 8
+NUM_BINS = 6
+#: per-bin int32 headroom: max terms accumulated with no overflow
+BIN_MAX_TERMS = 1 << (31 - BIN_BITS - 1)
+
+
+def bin_ref_exponent(max_abs) -> jnp.ndarray:
+    """Window anchor: e with max_abs * 2^-e in [0.5, 1); 0 for all-zero.
+
+    A pure function of the stream's maximum magnitude — permutation
+    invariant, and shared across devices via a pmax for collectives.
+    """
+    m = jnp.maximum(jnp.asarray(max_abs, jnp.float32),
+                    jnp.float32(2.0 ** -126))
+    return jnp.frexp(m)[1].astype(jnp.int32)
+
+
+def bin_split(x: jnp.ndarray, e_ref) -> jnp.ndarray:
+    """Split f32 values into (NUM_BINS, *x.shape) int32 exponent-bin digits.
+
+    x == sum_k digits[k] * 2^(e_ref - (k+1)*BIN_BITS) exactly for values
+    within 2^24 of the window anchor; the residual below the window is
+    dropped (see module comment).  Each extraction step is exact float
+    arithmetic: s = v * 2^W is a power-of-two scaling, round(s) is an
+    integer below 2^W, and s - round(s) is a multiple of ulp(s) — the
+    classic Dekker split.
+    """
+    v = _ldexp2(x.astype(jnp.float32), -jnp.asarray(e_ref, jnp.int32))
+    radix = jnp.float32(1 << BIN_BITS)
+    digits = []
+    for _ in range(NUM_BINS):
+        s = v * radix
+        d = jnp.round(s)
+        v = s - d                         # exact: both multiples of ulp(s)
+        digits.append(d.astype(jnp.int32))
+    return jnp.stack(digits)
+
+
+def bin_combine(bins: jnp.ndarray, e_ref) -> jnp.ndarray:
+    """The deferred final addition: (NUM_BINS, ...) int32 bins -> f32.
+
+    Integer carry-resolve first (each bin's digit beyond +-2^(W-1) carries
+    into the next-more-significant bin), which makes the representation a
+    canonical function of the accumulated total — so the f32 result is
+    bitwise independent of how the stream was blocked or ordered.  The
+    float combine then runs least-significant-first through the
+    compensated two-sum, so the one rounding that reaches the caller is
+    the final one.
+    """
+    e_ref = jnp.asarray(e_ref, jnp.int32)
+    resolved = [bins[k] for k in range(NUM_BINS)]
+    half = 1 << (BIN_BITS - 1)
+    for k in range(NUM_BINS - 1, 0, -1):
+        c = jnp.right_shift(resolved[k] + half, BIN_BITS)
+        resolved[k] = resolved[k] - (c << BIN_BITS)
+        resolved[k - 1] = resolved[k - 1] + c
+    acc = jnp.zeros(bins.shape[1:], jnp.float32)
+    comp = jnp.zeros(bins.shape[1:], jnp.float32)
+    for k in range(NUM_BINS - 1, -1, -1):
+        term = _ldexp2(resolved[k].astype(jnp.float32),
+                       e_ref - (k + 1) * BIN_BITS)
+        acc, e = two_sum(acc, term)
+        comp = comp + e
+    return acc + comp
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +315,36 @@ def intac_psum(x: jnp.ndarray, axis_name, *, qbits: int = 30,
     scale = choose_scale(gmax, n, qbits)
     q = quantize(x, scale)
     return dequantize(jax.lax.psum(q, axis_name), scale)
+
+
+def intac_psum2(x: jnp.ndarray, axis_name, *, qbits: int = 30) -> jnp.ndarray:
+    """Two-limb exact cross-device sum: full f32-headroom resolution.
+
+    Unlike ``intac_psum`` — whose shared scale shrinks with the device
+    count to keep the single int32 sum in headroom — the scale here is
+    sized by magnitude alone (``num_terms=1``): each device splits its
+    full-width int32 quantization into (hi, lo) limbs, both limbs psum in
+    the exact integer domain (per-device |hi| <= 2^(qbits-15) and lo <
+    2^15, so up to 2^15 devices carry-free at qbits=30), and one
+    ``limbs_resolve`` per reduction pays for the normalization.
+    """
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = choose_scale(gmax, 1, qbits)
+    hi, lo = limb_split(quantize(x, scale))
+    return limbs_resolve(jax.lax.psum(hi, axis_name),
+                         jax.lax.psum(lo, axis_name), scale)
+
+
+def bin_psum(x: jnp.ndarray, axis_name) -> jnp.ndarray:
+    """Exponent-binned exact cross-device sum (per-bin integer psum).
+
+    All devices agree on the window anchor via a pmax, split locally into
+    exponent-bin digits, psum the int32 bins (associative => bitwise
+    identical for any reduction topology), and carry-resolve once.
+    """
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    e_ref = bin_ref_exponent(gmax)
+    return bin_combine(jax.lax.psum(bin_split(x, e_ref), axis_name), e_ref)
 
 
 class EFState(NamedTuple):

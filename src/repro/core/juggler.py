@@ -92,21 +92,3 @@ def num_slots_for(num_microbatches: int) -> int:
     while (1 << k) < max(num_microbatches, 1):
         k += 1
     return max(k, 1) + 1  # +1 headroom for the final carry
-
-
-def accumulate_microbatch_grads(grad_fn, params, microbatches, *,
-                                num_microbatches: int, mean: bool = True):
-    """Deprecated shim — use ``repro.reduce.accumulate_microbatch_grads``.
-
-    The scan-over-microbatches loop now lives behind the front door's
-    Accumulator protocol (``repro.reduce.TreeAccumulator`` wraps this
-    module's push/finalize); this wrapper forwards and will be removed.
-    """
-    import warnings
-    warnings.warn("core.juggler.accumulate_microbatch_grads is deprecated; "
-                  "call repro.reduce.accumulate_microbatch_grads instead",
-                  DeprecationWarning, stacklevel=2)
-    from repro.reduce.accumulator import \
-        accumulate_microbatch_grads as _front
-    return _front(grad_fn, params, microbatches,
-                  num_microbatches=num_microbatches, mean=mean)

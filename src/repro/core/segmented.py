@@ -8,12 +8,12 @@ TPU translation: the "stream" is a flat (N, D) array tiled HBM→VMEM in
 blocks; the per-cycle serial input becomes a per-grid-step block; the PIS
 register file becomes a bounded VMEM accumulator addressed by segment label.
 
-The front door for segmented reductions is now ``repro.reduce`` — one call
-with accuracy policies (fast/compensated/exact) and registered backends
-(ref/blocked/pallas) all executing the identical block schedule.  This
-module keeps the scatter-add *math oracle* (``segment_sum_ref``), the
-monotone-id utilities, and the flash-partial combines; the old
-``segment_sum_blocked`` entry point survives as a deprecation shim.
+The front door for segmented reductions is ``repro.reduce`` — one call
+with accuracy policies (fast/compensated/exact/exact2/procrastinate) and
+registered backends (ref/blocked/pallas) all executing the identical
+block schedule.  This module keeps the scatter-add *math oracle*
+(``segment_sum_ref``), the monotone-id utilities, and the flash-partial
+combines.
 
 The bounded-storage guarantee (the paper's "2–8 PIS registers" and the
 minimum-set-size restriction) appears here as ``max_live_segments``: with
@@ -25,7 +25,6 @@ by the block size B.
 
 from __future__ import annotations
 
-import warnings
 from typing import Optional
 
 import jax.numpy as jnp
@@ -65,25 +64,6 @@ def segment_count_ref(segment_ids: jnp.ndarray, num_segments: int,
     if valid is not None:
         w = w * valid.astype(jnp.float32)
     return segment_sum_ref(w, segment_ids, num_segments)
-
-
-def segment_sum_blocked(values: jnp.ndarray, segment_ids: jnp.ndarray,
-                        num_segments: int, block_size: int = 512) -> jnp.ndarray:
-    """Deprecated shim — use ``repro.reduce(..., backend="blocked")``.
-
-    The streaming blocked schedule (lax.scan over (B, D) blocks, one-hot
-    matmul per block) now lives in ``repro.reduce.backends``; this wrapper
-    forwards and will be removed.  Note the front door accumulates in f32
-    and returns f32 regardless of input dtype.
-    """
-    warnings.warn("segment_sum_blocked is deprecated; call "
-                  "repro.reduce(values, segment_ids=..., num_segments=..., "
-                  "backend='blocked') instead", DeprecationWarning,
-                  stacklevel=2)
-    from repro import reduce as _reduce
-    return _reduce.reduce(values, segment_ids=segment_ids,
-                          num_segments=num_segments, backend="blocked",
-                          block_size=block_size)
 
 
 def segment_mean(values, segment_ids, num_segments, *,

@@ -1,15 +1,13 @@
 """Pallas TPU kernels for the compute hot-spots, with jnp oracles.
 
-  jugglepac_segsum  segmented streaming sum (the paper's accumulator),
-                    plus the policy-aware variant driven by repro.reduce
+  jugglepac_segsum  the one kernel body for the block schedule — every
+                    accuracy policy of repro.reduce runs through it
   intac_accum       exact fixed-point accumulation (carry-save analogue)
   flash_decode      streaming online-softmax decode attention
 
 Reductions should enter through ``repro.reduce`` (the ``pallas`` backend
 dispatches here); ``repro.kernels.ops`` remains the kernel-level wrapper
 layer that owns padding/tiling and selects interpret mode off-TPU.
-``ops.intac_sum_exact`` is a deprecation shim for
-``repro.reduce(..., policy="exact")``.
 """
 from . import ops, ref  # noqa: F401
-from .ops import flash_decode, intac_accum, intac_sum_exact, segment_sum  # noqa: F401
+from .ops import flash_decode, intac_accum, segment_sum  # noqa: F401

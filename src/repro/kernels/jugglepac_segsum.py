@@ -7,15 +7,23 @@ The circuit's streaming schedule, mapped to the TPU grid:
     preserved — "cycles" become grid steps);
   * FSM state 1 (pair raw inputs)       ->  the intra-tile reduction, expressed
     as a one-hot matmul so it runs on the MXU: contrib = onehot(ids)^T @ vals;
-  * the PIS register file               ->  the (S, D) f32 accumulator tile that
-    stays resident in VMEM across grid steps (same output block revisited),
+  * the PIS register file               ->  the policy's carry tuple — (S, D)
+    tiles resident in VMEM across grid steps (same output block revisited),
     addressed by segment label exactly like the PIS registers are addressed
     by set label;
   * in-order emission                   ->  row s of the output is segment s.
 
-VMEM budget per step: B*D (values) + B (ids) + S*D (accumulator) floats —
-the wrapper (ops.segment_sum) tiles the label space when S*D exceeds the
-budget, the software analogue of "2–8 PIS registers, not a BRAM".
+There is exactly ONE kernel body for the block schedule:
+``_segsum_policy_kernel`` executes ``policy.update`` — the same pure jnp
+ops the ref/blocked backends thread — against the carry refs, so the
+cross-backend bitwise contract holds for every policy (fast / compensated
+f32 carries, exact single-limb, exact2 two-limb, procrastinate bins) by
+construction rather than by duplicated code.
+
+VMEM budget per step: B*D (values) + B (ids) + carry_len*S*D floats —
+the callers (ops.segment_sum, the reduce pallas backend) tile the label
+space when the carry would exceed the budget, the software analogue of
+"2–8 PIS registers, not a BRAM".
 """
 
 from __future__ import annotations
@@ -27,67 +35,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _segsum_kernel(ids_ref, vals_ref, out_ref, *, num_segments: int,
-                   seg_offset: int):
-    step = pl.program_id(0)
-
-    @pl.when(step == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
-    ids = ids_ref[...]                      # (B, 1) int32
-    vals = vals_ref[...].astype(jnp.float32)  # (B, D)
-    labels = jax.lax.broadcasted_iota(
-        jnp.int32, (1, num_segments), 1) + seg_offset
-    onehot = (ids == labels).astype(jnp.float32)        # (B, S)
-    # state-1 pairing of the whole tile at once, on the MXU:
-    out_ref[...] += jnp.dot(onehot.T, vals,
-                            preferred_element_type=jnp.float32)
-
-
-def segsum_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
-                  num_segments: int, *, block_rows: int = 512,
-                  seg_offset: int = 0, interpret: bool = False) -> jnp.ndarray:
-    """values (N, D), segment_ids (N,) int32 -> (num_segments, D) f32.
-
-    N must be a multiple of block_rows (wrapper pads with an out-of-range
-    label, which one-hots to a zero row).
-    """
-    n, d = values.shape
-    if n % block_rows:
-        raise ValueError(f"segsum_pallas: N={n} must be a multiple of "
-                         f"block_rows={block_rows}; pad in the wrapper")
-    nb = n // block_rows
-    ids2 = segment_ids.reshape(n, 1).astype(jnp.int32)
-    kernel = functools.partial(_segsum_kernel, num_segments=num_segments,
-                               seg_offset=seg_offset)
-    return pl.pallas_call(
-        kernel,
-        grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((block_rows, 1), lambda b: (b, 0)),
-            pl.BlockSpec((block_rows, d), lambda b: (b, 0)),
-        ],
-        out_specs=pl.BlockSpec((num_segments, d), lambda b: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_segments, d), jnp.float32),
-        interpret=interpret,
-    )(ids2, values)
-
-
-# ---------------------------------------------------------------------------
-# Policy-aware variant for repro.reduce
-# ---------------------------------------------------------------------------
-
-
 def _segsum_policy_kernel(ids_ref, vals_ref, *out_refs, num_segments: int,
-                          seg_offset: int, policy: str, acc_dtype):
-    """The same streaming schedule with the accuracy-policy carry baked in.
+                          seg_offset: int, policy):
+    """The streaming schedule with the accuracy-policy carry baked in.
 
-    ``fast``        out = (acc f32,)         acc += contrib
-    ``compensated`` out = (acc, comp f32)    Knuth two-sum across blocks
-    ``exact``       out = (acc int32,)       integer add (values arrive
-                                             pre-quantized; associative, so
-                                             bitwise-equal for any schedule)
+    ``policy.update`` is traced straight into the grid loop — the one
+    canonical op sequence per policy; the cross-backend bitwise contract
+    depends on this being the very function the blocked/ref backends
+    call.  Policies executed here must zero-init their carry.
     """
     step = pl.program_id(0)
 
@@ -101,40 +56,34 @@ def _segsum_policy_kernel(ids_ref, vals_ref, *out_refs, num_segments: int,
     labels = jax.lax.broadcasted_iota(
         jnp.int32, (1, num_segments), 1) + seg_offset
     onehot = (ids == labels).astype(vals.dtype)     # (B, S)
-    contrib = jnp.dot(onehot.T, vals, preferred_element_type=acc_dtype)
-
-    if policy == "compensated":
-        # the one canonical two_sum: the cross-backend bitwise contract
-        # depends on this op sequence matching the blocked/ref backends
-        from repro.reduce.policy import two_sum
-        s, e = two_sum(out_refs[0][...], contrib)
-        out_refs[0][...] = s
-        out_refs[1][...] += e
-    else:                                           # fast / exact
-        out_refs[0][...] += contrib
+    # state-1 pairing of the whole tile at once, on the MXU:
+    contrib = jnp.dot(onehot.T, vals,
+                      preferred_element_type=policy.acc_dtype)
+    carry = policy.update(tuple(r[...] for r in out_refs), contrib)
+    for r, c in zip(out_refs, carry):
+        r[...] = c
 
 
 def segsum_policy_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
-                         num_segments: int, *, policy: str = "fast",
-                         carry_len: int = 1, block_rows: int = 512,
-                         seg_offset: int = 0, interpret: bool = False):
-    """values (N, D) already in the policy's domain dtype (f32 or int32),
-    ids (N,) int32 -> tuple of ``carry_len`` (num_segments, D) carry arrays.
+                         num_segments: int, *, policy,
+                         block_rows: int = 512, seg_offset: int = 0,
+                         interpret: bool = False):
+    """values (N, D) already in ``policy``'s domain dtype (f32 or int32 —
+    ``Policy.prepare`` already ran), ids (N,) int32 -> tuple of
+    ``policy.carry_len`` (num_segments, D) carry arrays, not finalized.
 
-    N must be a multiple of block_rows (the backend pads with
+    N must be a multiple of block_rows (the callers pad with
     ``OUT_OF_RANGE_LABEL``, which one-hots to a zero row).
     """
     n, d = values.shape
     if n % block_rows:
         raise ValueError(f"segsum_policy_pallas: N={n} must be a multiple "
-                         f"of block_rows={block_rows}; pad in the backend")
+                         f"of block_rows={block_rows}; pad in the caller")
     nb = n // block_rows
-    acc_dtype = values.dtype
     ids2 = segment_ids.reshape(n, 1).astype(jnp.int32)
     kernel = functools.partial(_segsum_policy_kernel,
                                num_segments=num_segments,
-                               seg_offset=seg_offset, policy=policy,
-                               acc_dtype=acc_dtype)
+                               seg_offset=seg_offset, policy=policy)
     out = pl.pallas_call(
         kernel,
         grid=(nb,),
@@ -143,9 +92,9 @@ def segsum_policy_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
             pl.BlockSpec((block_rows, d), lambda b: (b, 0)),
         ],
         out_specs=[pl.BlockSpec((num_segments, d), lambda b: (0, 0))
-                   for _ in range(carry_len)],
-        out_shape=[jax.ShapeDtypeStruct((num_segments, d), acc_dtype)
-                   for _ in range(carry_len)],
+                   for _ in range(policy.carry_len)],
+        out_shape=[jax.ShapeDtypeStruct((num_segments, d), policy.acc_dtype)
+                   for _ in range(policy.carry_len)],
         interpret=interpret,
     )(ids2, values)
     return tuple(out) if isinstance(out, (list, tuple)) else (out,)

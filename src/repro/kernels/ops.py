@@ -15,18 +15,17 @@ The wrappers own the padding/tiling contracts so kernel bodies stay minimal:
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.reduce.backends import OUT_OF_RANGE_LABEL
+from repro.reduce.policy import get_policy
 
 from . import flash_decode as _fd
 from . import intac_accum as _ia
 from . import jugglepac_segsum as _ss
-from .ref import limbs_to_float
 
 
 def _interpret_default() -> bool:
@@ -37,11 +36,13 @@ def _interpret_default() -> bool:
 _SEGSUM_ACC_BUDGET = 2 * 1024 * 1024  # 8 MiB of f32 out of ~16 MiB VMEM
 
 
-def seg_tile_for(num_segments: int, d: int) -> int:
-    """Label-space tile size so the (S, D) accumulator tile fits the VMEM
-    budget — the "few PIS registers, not a BRAM" rule.  The one source of
-    truth for both this wrapper and the repro.reduce pallas backend."""
-    return max(1, min(num_segments, _SEGSUM_ACC_BUDGET // max(d, 1)))
+def seg_tile_for(num_segments: int, d: int, carries: int = 1) -> int:
+    """Label-space tile size so all ``carries`` (S, D) carry tiles together
+    fit the VMEM budget — the "few PIS registers, not a BRAM" rule.  The
+    one source of truth for both this wrapper and the repro.reduce pallas
+    backend (which passes ``policy.carry_len``)."""
+    return max(1, min(num_segments,
+                      _SEGSUM_ACC_BUDGET // (max(d, 1) * max(carries, 1))))
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "block_rows",
@@ -49,11 +50,18 @@ def seg_tile_for(num_segments: int, d: int) -> int:
 def segment_sum(values: jnp.ndarray, segment_ids: jnp.ndarray,
                 num_segments: int, *, block_rows: int = 512,
                 interpret: Optional[bool] = None) -> jnp.ndarray:
-    """JugglePAC segmented sum. values (N, D) or (N,), ids (N,) int32."""
+    """JugglePAC segmented sum. values (N, D) or (N,), ids (N,) int32.
+
+    A thin wrapper over the one kernel body with the ``fast`` policy
+    (f32 carry, identity finalize) — ``repro.reduce`` drives the same
+    kernel for every other policy.
+    """
     interpret = _interpret_default() if interpret is None else interpret
+    policy = get_policy("fast")
     squeeze = values.ndim == 1
     if squeeze:
         values = values[:, None]
+    values = values.astype(jnp.float32)        # the fast policy's domain
     n, d = values.shape
     pad = (-n) % block_rows
     if pad:
@@ -66,9 +74,9 @@ def segment_sum(values: jnp.ndarray, segment_ids: jnp.ndarray,
     outs = []
     for off in range(0, num_segments, seg_tile):
         s = min(seg_tile, num_segments - off)
-        outs.append(_ss.segsum_pallas(values, segment_ids, s,
-                                      block_rows=block_rows, seg_offset=off,
-                                      interpret=interpret))
+        outs.append(_ss.segsum_policy_pallas(
+            values, segment_ids, s, policy=policy, block_rows=block_rows,
+            seg_offset=off, interpret=interpret)[0])
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
     return out[:, 0] if squeeze else out
 
@@ -88,23 +96,6 @@ def intac_accum(values: jnp.ndarray, scale: jnp.ndarray, *,
         values = jnp.pad(values, ((0, pad), (0, 0)))
     return _ia.intac_accum_pallas(values, scale, block_rows=block_rows,
                                   interpret=interpret)
-
-
-def intac_sum_exact(values: jnp.ndarray, scale: jnp.ndarray, *,
-                    block_rows: int = 256,
-                    interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Deprecated shim — use ``repro.reduce(values, policy="exact")``.
-
-    The front door sizes the fixed-point scale automatically; keep calling
-    this only if you need an explicit externally-agreed ``scale`` (then
-    prefer ``intac_accum`` + ``ref.limbs_to_float`` directly).
-    """
-    warnings.warn("intac_sum_exact is deprecated; call "
-                  "repro.reduce(values, policy='exact') instead",
-                  DeprecationWarning, stacklevel=2)
-    limbs = intac_accum(values, scale, block_rows=block_rows,
-                        interpret=interpret)
-    return limbs_to_float(limbs, scale)
 
 
 @functools.partial(jax.jit, static_argnames=("sm_scale", "block_kv",

@@ -6,8 +6,11 @@ state.  This package exposes that contract once, with two orthogonal
 first-class knobs:
 
   * **policy** (accuracy): ``fast`` (f32 fixed pairing tree),
-    ``compensated`` (Kahan/two-sum), ``exact`` (INTAC integer limbs) —
-    ``policy.py``, extensible via ``@register_policy``.
+    ``compensated`` (Kahan/two-sum), ``exact`` (INTAC single-limb int32),
+    ``exact2`` (two-limb carry-save — full resolution at any N), and
+    ``procrastinate`` (exponent-indexed bins — <=1 ulp for arbitrary f32
+    absent catastrophic cancellation)
+    — ``policy.py``, extensible via ``@register_policy``.
   * **backend** (executor): ``ref`` / ``blocked`` / ``pallas`` — all run
     the same block schedule so results match bitwise — ``backends.py``,
     extensible via ``@register_backend``.
@@ -26,10 +29,11 @@ Entry points:
       sum and count, on every backend.
 """
 
-from .accumulator import (Accumulator, FlashAccumulator,  # noqa: F401
-                          KahanAccumulator, LimbAccumulator,
-                          TreeAccumulator, accumulate_microbatch_grads,
-                          merge_tree, scan_accumulate)
+from .accumulator import (Accumulator, BinAccumulator,  # noqa: F401
+                          FlashAccumulator, KahanAccumulator,
+                          LimbAccumulator, TreeAccumulator,
+                          accumulate_microbatch_grads, merge_tree,
+                          scan_accumulate)
 from .api import ReduceSpec, reduce  # noqa: F401
 from .backends import (BACKENDS, Backend, OUT_OF_RANGE_LABEL,  # noqa: F401
                        get_backend, mask_out_of_range, register_backend,
@@ -57,7 +61,8 @@ __all__ = [
     "Backend", "BACKENDS", "register_backend", "get_backend",
     "select_backend", "mask_out_of_range",
     "Accumulator", "TreeAccumulator", "KahanAccumulator",
-    "LimbAccumulator", "FlashAccumulator", "scan_accumulate", "merge_tree",
+    "LimbAccumulator", "BinAccumulator", "FlashAccumulator",
+    "scan_accumulate", "merge_tree",
     "accumulate_microbatch_grads",
     "collective_mean", "collective_mean_tree", "COLLECTIVE_POLICIES",
 ]

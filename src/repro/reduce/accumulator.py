@@ -24,6 +24,9 @@ Instances:
     ~f64 accuracy.
   * ``LimbAccumulator``  — INTAC two-limb int32 carry-save (wraps
     ``core.intac``): exact, order-independent, one rounding at finalize.
+  * ``BinAccumulator``   — exponent-indexed "procrastination" bins (wraps
+    ``core.intac`` bin_split/combine): exact for any f32 within the
+    window, order-independent, all rounding deferred to finalize.
   * ``FlashAccumulator`` — online-softmax (m, l, o) triple (wraps
     ``core.segmented``): the "any multi-cycle operator" clause of the
     paper, instantiated for attention.
@@ -133,6 +136,33 @@ class LimbAccumulator:
         return intac.limb_finalize(state)
 
 
+class BinAccumulator:
+    """Exponent-indexed bin accumulation (Liguori's procrastination /
+    Neal's small superaccumulator, int32 edition).
+
+    ``max_abs`` anchors the fixed-point window a priori — the bin
+    analogue of ``LimbAccumulator``'s shared scale; pushes are exact
+    digit splits + integer adds (order-independent), and the one rounding
+    happens in ``finalize``.  Up to ``intac.BIN_MAX_TERMS`` (= 2^22)
+    pushes accumulate with no bin overflow.
+    """
+
+    def __init__(self, max_abs):
+        self.e_ref = intac.bin_ref_exponent(max_abs)
+
+    def init(self, template):
+        return jnp.zeros((intac.NUM_BINS,) + jnp.shape(template), jnp.int32)
+
+    def push(self, state, x):
+        return state + intac.bin_split(x, self.e_ref)
+
+    def merge(self, a, b):
+        return a + b
+
+    def finalize(self, state) -> jnp.ndarray:
+        return intac.bin_combine(state, self.e_ref)
+
+
 class FlashAccumulator:
     """Online-softmax partials: state = (max m, denom l, weighted out o).
 
@@ -197,10 +227,9 @@ def accumulate_microbatch_grads(grad_fn, params, microbatches, *,
                                 num_microbatches: int, mean: bool = True):
     """Microbatch gradient accumulation through the Accumulator protocol.
 
-    The front-door replacement for ``core.juggler.accumulate_microbatch_
-    grads``: scan ``grad_fn(params, mb)`` over stacked microbatches,
-    pushing each gradient into a ``TreeAccumulator`` (O(log n) live
-    copies, fixed pairing schedule).  Returns (mean_or_sum, aux_stacked).
+    Scans ``grad_fn(params, mb)`` over stacked microbatches, pushing each
+    gradient into a ``TreeAccumulator`` (O(log n) live copies, fixed
+    pairing schedule).  Returns (mean_or_sum, aux_stacked).
     """
     acc = TreeAccumulator.for_count(num_microbatches)
 

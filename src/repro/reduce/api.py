@@ -42,7 +42,7 @@ class ReduceSpec:
     """
 
     op: str = "sum"                   # "sum" | "mean"
-    policy: str = "fast"              # "fast" | "compensated" | "exact"
+    policy: str = "fast"              # any registered policy name
     backend: Optional[str] = None
     block_size: int = 512
     interpret: Optional[bool] = None
@@ -70,6 +70,18 @@ def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
         raise ValueError(f"backend {backend.name!r} does not implement "
                          f"policy {policy.name!r} "
                          f"(capabilities: {sorted(backend.policies)})")
+    if policy.max_block_size and spec.block_size > policy.max_block_size:
+        raise ValueError(
+            f"policy {policy.name!r} admits blocks of at most "
+            f"{policy.max_block_size} rows (its integer-headroom bound); "
+            f"got block_size={spec.block_size}")
+    nb = -(-n // spec.block_size)
+    if policy.max_blocks and nb > policy.max_blocks:
+        raise ValueError(
+            f"policy {policy.name!r} admits at most {policy.max_blocks} "
+            f"schedule blocks (its per-block carry headroom), but "
+            f"{n} rows at block_size={spec.block_size} need {nb}; "
+            f"raise block_size or split the stream")
 
     if n == 0:
         # empty stream: identity on every backend (the pallas grid cannot
@@ -90,15 +102,17 @@ def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
         out = policy.finalize(carry, ctx)            # (S, D) f32
 
     if spec.op == "mean" and n > 0:
-        # Counts: small exact integers, so a single scatter-add of ones is
-        # bitwise-identical to running the block schedule again (both
-        # produce the same exact values in f32) at a fraction of the cost,
-        # and it is backend-independent by construction.  segment_ids is
-        # already sentinel-masked; park dropped rows on a scratch row.
+        # Counts: exact integers, so a single scatter-add is bitwise-
+        # identical to running the block schedule again at a fraction of
+        # the cost, and backend-independent by construction.  Accumulate
+        # in int32 — an f32 count buffer silently saturates at 2^24
+        # (adding 1.0 to 16777216.0 is a no-op) — and cast once for the
+        # divide.  segment_ids is already sentinel-masked; park dropped
+        # rows on a scratch row.
         ids_safe = jnp.where(segment_ids >= 0, segment_ids, num_segments)
-        cnt = jnp.zeros((num_segments + 1, 1), jnp.float32) \
-            .at[ids_safe].add(1.0)[:num_segments]          # (S, 1)
-        out = out / jnp.maximum(cnt, 1.0)
+        cnt = jnp.zeros((num_segments + 1, 1), jnp.int32) \
+            .at[ids_safe].add(1)[:num_segments]            # (S, 1)
+        out = out / jnp.maximum(cnt, 1).astype(jnp.float32)
 
     if not segmented:
         out = out[0]
@@ -122,7 +136,8 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
         ``OUT_OF_RANGE_LABEL`` — are dropped from sums *and* counts.
       num_segments: static label-space size; required with ``segment_ids``.
       op: "sum" or "mean" (mean counts only in-range rows).
-      policy: accuracy tier — "fast", "compensated", or "exact".
+      policy: accuracy tier — "fast", "compensated", "exact", "exact2",
+        or "procrastinate" (see ``repro.reduce.policy`` for the ladder).
       backend: executor — "ref", "blocked", "pallas", or None to
         auto-select.
       block_size: rows per schedule block (the paper's cycle granularity).

@@ -183,7 +183,8 @@ def _run_blocked(values, segment_ids, num_segments, *, policy: Policy,
     return carry
 
 
-@register_backend("pallas", policies=("fast", "compensated", "exact"),
+@register_backend("pallas", policies=("fast", "compensated", "exact",
+                                      "exact2", "procrastinate"),
                   description="TPU Pallas kernel (interpret off-TPU) with "
                               "VMEM-budget label-space tiling")
 def _run_pallas(values, segment_ids, num_segments, *, policy: Policy,
@@ -198,14 +199,13 @@ def _run_pallas(values, segment_ids, num_segments, *, policy: Policy,
     values = vb.reshape(-1, d)
     segment_ids = ib.reshape(-1)
     # VMEM-budget label tiling, shared with kernels.ops.segment_sum
-    seg_tile = seg_tile_for(num_segments, d)
+    seg_tile = seg_tile_for(num_segments, d, policy.carry_len)
     parts = []
     for off in range(0, num_segments, seg_tile):
         s = min(seg_tile, num_segments - off)
         parts.append(_ss.segsum_policy_pallas(
-            values, segment_ids, s, policy=policy.name,
-            carry_len=policy.carry_len, block_rows=block_size,
-            seg_offset=off, interpret=interpret))
+            values, segment_ids, s, policy=policy,
+            block_rows=block_size, seg_offset=off, interpret=interpret))
     if len(parts) == 1:
         return parts[0]
     return tuple(jnp.concatenate([p[i] for p in parts], axis=0)

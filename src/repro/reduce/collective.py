@@ -14,12 +14,22 @@ they are the same accuracy knob the array API exposes:
     collective analogue of a Kahan compensation term (bits/32 of the
     fp32 payload on the wire).
   * ``exact``       — full-width INTAC integer psum: bitwise-deterministic
-    for any reduction topology / pod layout, no compression.
+    for any reduction topology / pod layout, no compression.  The shared
+    scale shrinks with the device count (single-limb headroom).
+  * ``exact2``      — two-limb INTAC integer psum: the per-device hi/lo
+    limb split keeps full-resolution quantization (scale sized by
+    magnitude alone) for up to 2^15 devices; one carry-resolve per
+    reduction.
+  * ``procrastinate`` — per-exponent-bin integer psum: each device splits
+    its gradient into exponent-window digits, every bin psums in the
+    exact integer domain, and one carry-resolve + compensated combine
+    defers all rounding — <=1 ulp of the f32 mean for any topology
+    (absolute 2^-49-of-max bound when devices cancel catastrophically).
 
-All three share one signature so training code switches policy without
-rewiring residual plumbing: ``(mean, new_residual)`` — fast/exact pass
-``residual`` through untouched (including ``None``; only compensated
-materializes an error-feedback state).
+All tiers share one signature so training code switches policy without
+rewiring residual plumbing: ``(mean, new_residual)`` — every tier except
+compensated passes ``residual`` through untouched (including ``None``;
+only compensated materializes an error-feedback state).
 
 Must be called inside ``shard_map`` (they use named-axis collectives).
 """
@@ -33,7 +43,8 @@ import jax.numpy as jnp
 
 from repro.core import intac
 
-COLLECTIVE_POLICIES = ("fast", "compensated", "exact")
+COLLECTIVE_POLICIES = ("fast", "compensated", "exact", "exact2",
+                       "procrastinate")
 
 
 def collective_mean(x: jnp.ndarray, axis_names: Sequence[str], *,
@@ -53,13 +64,21 @@ def collective_mean(x: jnp.ndarray, axis_names: Sequence[str], *,
             g = jax.lax.psum(g, a)      # innermost (fastest) axis first
         return g / jax.lax.psum(jnp.float32(1.0), axes), residual
 
-    # exact / compensated are the core INTAC collectives (one copy of the
-    # quantize/psum/dequantize recipe lives in core/intac.py); integer
-    # sums are associative, so the joint-axes psum is bitwise identical
-    # to any hierarchical per-axis order.
+    # the integer tiers are the core INTAC collectives (one copy of each
+    # quantize/psum/resolve recipe lives in core/intac.py); integer sums
+    # are associative, so the joint-axes psum is bitwise identical to any
+    # hierarchical per-axis order.
     if policy == "exact":
         n = jax.lax.psum(1, axes)
         return intac.intac_psum(x, axes) / n, residual
+
+    if policy == "exact2":
+        n = jax.lax.psum(1, axes)
+        return intac.intac_psum2(x, axes) / n, residual
+
+    if policy == "procrastinate":
+        n = jax.lax.psum(1, axes)
+        return intac.bin_psum(x, axes) / n, residual
 
     if policy == "compensated":
         if residual is None:       # only this policy materializes a state

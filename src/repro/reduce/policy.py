@@ -1,42 +1,69 @@
 """Accuracy policies — the first-class knob of ``repro.reduce``.
 
 JugglePAC's fixed-pairing argument says *what order* additions happen in;
-the policy says *in what domain* they happen.  Three tiers, all sharing the
+the policy says *in what domain* they happen.  Five tiers, all sharing the
 same block schedule (so a policy swap never changes the data movement):
 
-  * ``fast``         — plain f32 accumulation over the fixed block tree.
+  * ``fast``          — plain f32 accumulation over the fixed block tree.
     Deterministic (the schedule depends only on shapes), O(log n) error
     growth, zero overhead.
-  * ``compensated``  — Kahan/two-sum carried across blocks: the (S, D)
+  * ``compensated``   — Kahan/two-sum carried across blocks: the (S, D)
     accumulator travels with an equally-shaped compensation term that
     captures every cross-block rounding error.  ~f64 accuracy at f32 cost.
-  * ``exact``        — INTAC: quantize once to a shared power-of-two scale,
+  * ``exact``         — INTAC: quantize once to a shared power-of-two scale,
     accumulate in int32 (associative => bitwise identical for *any* block
     size, backend, or device layout), dequantize once per reduction — the
-    paper's "pay for normalization once per set".
+    paper's "pay for normalization once per set".  The scale is sized so
+    the *whole stream* fits single-limb int32 headroom, so resolution
+    shrinks as 1/N: cheap state, but long streams lose precision.
+  * ``exact2``        — two-limb int32 carry-save (``core.intac.LimbState``
+    semantics): the per-block contribution splits into (hi, lo) limbs, so
+    headroom comes from the second limb instead of the scale.  Resolution
+    is fixed at ~2^-21 of max |x| for any stream length up to 2^24 rows —
+    exact at any N for values on the scale's dyadic grid.
+  * ``procrastinate`` — exponent-indexed bins after Liguori (arXiv
+    2406.05866) / Neal (arXiv 1505.05571): each f32 value splits exactly
+    into per-exponent-window integer digits, bins accumulate in int32,
+    and *all* rounding procrastinates to one carry-resolve + compensated
+    combine in ``finalize``.  Exact to <=1 ulp of the f32 result for any
+    stream up to 2^22 rows whose result lands within ~2^24 of the
+    largest |value| (the 48-bit window truncates below that, so under
+    catastrophic cancellation the bound is absolute — N * 2^-49 of the
+    max — not relative), at NUM_BINS x the accumulator state.
+
+The three integer tiers are bitwise order-independent: any block size,
+backend, input permutation, or device layout produces identical bits.
 
 A policy owns three hooks, each pure and shape-polymorphic:
 
   ``prepare(values, num_terms)``      -> (domain_values, ctx)
   ``init / update``                   -> the per-block carry (a tuple of
-                                         (S, D) arrays all backends thread
-                                         identically; the pallas backend
-                                         bakes ``update`` into its kernel)
+                                         ``carry_len`` arrays all backends
+                                         thread identically; the pallas
+                                         kernel executes ``update`` inside
+                                         its grid loop)
   ``finalize(carry, ctx)``            -> (S, D) f32
 
-New tiers (e.g. Neal superaccumulators, exponent-indexed procrastination)
-register with ``@register_policy`` and immediately work on the ``ref`` and
-``blocked`` backends; the ``pallas`` backend advertises the policies its
-kernels implement via its capability flags.
+New tiers register with ``@register_policy`` and immediately work on every
+schedule-generic backend (``ref``/``blocked``); the ``pallas`` backend
+advertises the policies its kernel has been validated for via its
+capability flags.  ``update`` must be pure elementwise/jnp ops (it is
+traced into the kernel body) and ``init`` must be zeros.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 
-from repro.core.intac import choose_scale, dequantize, quantize
+# Direct submodule import (not ``from repro.core import ...``): this
+# module loads while repro.core's __init__ may still be mid-execution
+# (core.segmented -> reduce.backends -> here), and intac itself imports
+# nothing from repro, so the submodule path always resolves.
+import repro.core.intac as intac
+from repro.core.intac import (choose_scale, dequantize, quantize,  # noqa: F401
+                              two_sum)
 
 POLICIES: Dict[str, "Policy"] = {}
 
@@ -56,19 +83,6 @@ def get_policy(name: str) -> "Policy":
                          f"{sorted(POLICIES)}") from None
 
 
-def two_sum(a: jnp.ndarray, b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Knuth two-sum: s = fl(a+b) and the exact rounding error e.
-
-    a + b == s + e exactly, with no magnitude precondition.  The backends
-    must execute these six ops in this order — the error term is the whole
-    point, so the expression must never be algebraically simplified.
-    """
-    s = a + b
-    bp = s - a
-    e = (a - (s - bp)) + (b - bp)
-    return s, e
-
-
 class Policy:
     """Base accuracy policy.  Subclasses set ``name`` and override hooks."""
 
@@ -77,11 +91,19 @@ class Policy:
     carry_len: int = 1
     #: dtype the backends accumulate in (drives kernel specialization)
     acc_dtype = jnp.float32
+    #: largest schedule block the policy's headroom analysis covers
+    #: (None = any); ``reduce`` validates ``block_size`` against it
+    max_block_size: Optional[int] = None
+    #: largest block *count* the per-block carry headroom covers (None =
+    #: any); ``reduce`` validates ceil(n / block_size) against it
+    max_blocks: Optional[int] = None
 
     def prepare(self, values: jnp.ndarray, num_terms: int):
         """Map raw (N, D) values into the accumulation domain.
 
         Returns (domain_values, ctx); ctx is passed back to ``finalize``.
+        The domain may be wider than (N, D) — e.g. per-element digit
+        splits — as long as ``finalize`` maps the carry back to (S, D).
         """
         return values.astype(jnp.float32), None
 
@@ -131,7 +153,8 @@ class ExactPolicy(Policy):
     stream fits int32 headroom (the paper's a-priori bit-width step), so no
     partial sum can overflow anywhere in the schedule.  Integer addition is
     associative — the result is bitwise independent of backend, block size,
-    and device layout.
+    and device layout.  The headroom-from-scale trade means resolution
+    shrinks as 1/N; ``exact2``/``procrastinate`` remove that trade.
     """
 
     name = "exact"
@@ -147,3 +170,99 @@ class ExactPolicy(Policy):
 
     def finalize(self, carry, ctx) -> jnp.ndarray:
         return dequantize(carry[0], ctx)
+
+
+@register_policy
+class Exact2Policy(Policy):
+    """Two-limb INTAC carry-save: headroom no longer trades against
+    resolution.
+
+    The scale is sized by magnitude alone (``QBITS`` bits below int32, so
+    a 512-row block contribution cannot overflow), and each block's int32
+    contribution splits into (hi, lo) limbs on the way into the carry —
+    ``core.intac.LimbState`` semantics threaded through the block
+    schedule.  Up to 2^24 rows accumulate carry-free; ``finalize`` is one
+    ``limbs_resolve`` whose integer canonicalization makes the result
+    bitwise independent of block size, backend, and input order.
+    """
+
+    name = "exact2"
+    carry_len = 2
+    acc_dtype = jnp.int32
+    #: per-value quantization bits: block contribs stay below int32 for
+    #: blocks up to 2^(30-QBITS) = 512 rows
+    QBITS = 21
+    max_block_size = 1 << (30 - QBITS)
+    #: limb headroom: every block adds one lo remainder < 2^15 and one
+    #: hi part <= 2^15 to the carries, so the *block count* — not the row
+    #: count — is what the int32 limb sums bound: 2^16 blocks is the hard
+    #: ceiling; 2^15 keeps a 2x margin (2^24 rows at the max block size,
+    #: proportionally fewer for smaller blocks — both guards enforced).
+    max_blocks = 1 << (30 - intac.LIMB_SHIFT)
+    MAX_TERMS = max_block_size * max_blocks
+
+    def prepare(self, values: jnp.ndarray, num_terms: int):
+        if num_terms > self.MAX_TERMS:
+            raise ValueError(
+                f"exact2: {num_terms} rows exceed the two-limb headroom "
+                f"bound ({self.MAX_TERMS}); split the stream and merge "
+                f"with core.intac.limb_merge")
+        v = values.astype(jnp.float32)
+        scale = choose_scale(jnp.max(jnp.abs(v)), 1, qbits=self.QBITS)
+        return quantize(v, scale), scale
+
+    def init(self, num_segments: int, d: int):
+        z = jnp.zeros((num_segments, d), jnp.int32)
+        return (z, z)
+
+    def update(self, carry, contrib):
+        hi, lo = carry
+        chi, clo = intac.limb_split(contrib)
+        return (hi + chi, lo + clo)
+
+    def finalize(self, carry, ctx) -> jnp.ndarray:
+        hi, lo = carry
+        return intac.limbs_resolve(hi, lo, ctx)
+
+
+@register_policy
+class ProcrastinatePolicy(Policy):
+    """Exponent-indexed bin accumulation (Liguori/Neal procrastination).
+
+    ``prepare`` splits every f32 value — exactly — into
+    ``intac.NUM_BINS`` signed integer digits of a fixed-point window
+    anchored at the stream's maximum exponent, laid out digit-major along
+    the feature axis, so the one-hot block matmul accumulates all bins at
+    once and the carry is a single (S, NUM_BINS*D) int32 array.  Integer
+    bin adds are associative (bitwise order-independent); all rounding
+    happens once, in ``finalize``'s carry-resolve + compensated combine.
+    Exact to <=1 ulp of the f32 result for arbitrary f32 data up to
+    ``intac.BIN_MAX_TERMS`` rows — provided the result is not
+    cancellation-dominated: values below max|x| * 2^-24 truncate (once,
+    per element) at the window's 2^-48-of-max quantum, so when large
+    terms cancel to a tiny residual the error is bounded absolutely
+    (N * 2^-49 of the max), not relatively.
+    """
+
+    name = "procrastinate"
+    acc_dtype = jnp.int32
+
+    def prepare(self, values: jnp.ndarray, num_terms: int):
+        if num_terms > intac.BIN_MAX_TERMS:
+            raise ValueError(
+                f"procrastinate: {num_terms} rows exceed the per-bin "
+                f"headroom bound ({intac.BIN_MAX_TERMS}); split the "
+                f"stream and add the bin carries")
+        v = values.astype(jnp.float32)
+        n, d = v.shape
+        e_ref = intac.bin_ref_exponent(jnp.max(jnp.abs(v)))
+        digits = intac.bin_split(v, e_ref)           # (NB, N, D)
+        domain = jnp.moveaxis(digits, 0, 1).reshape(n, intac.NUM_BINS * d)
+        return domain, e_ref
+
+    def finalize(self, carry, ctx) -> jnp.ndarray:
+        c = carry[0]                                 # (S, NB*D) int32
+        s, wd = c.shape
+        bins = jnp.moveaxis(c.reshape(s, intac.NUM_BINS,
+                                      wd // intac.NUM_BINS), 1, 0)
+        return intac.bin_combine(bins, ctx)

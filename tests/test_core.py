@@ -63,13 +63,14 @@ def test_tree_combine_nonpow2_order():
        st.integers(min_value=1, max_value=8),
        st.sampled_from([64, 128, 257]))
 def test_blocked_segment_sum(lengths, d, block):
+    from repro import reduce as R
     total = sum(lengths)
     ids = segmented.segments_from_lengths(jnp.asarray(lengths), total)
     vals = jnp.asarray(
         np.random.RandomState(total).randn(total, d).astype(np.float32))
     ref = segmented.segment_sum_ref(vals, ids, len(lengths))
-    out = segmented.segment_sum_blocked(vals, ids, len(lengths),
-                                        block_size=block)
+    out = R.reduce(vals, segment_ids=ids, num_segments=len(lengths),
+                   backend="blocked", block_size=block)
     assert np.allclose(out, ref, atol=1e-4)
 
 
@@ -141,6 +142,51 @@ def test_choose_scale_no_overflow():
         assert float(np.log2(scale)) == int(np.log2(scale))
 
 
+def test_limb_split_boundaries():
+    """The limb split is pure integer shift/mask, so it reconstructs
+    exactly at and beyond the f32 24-bit mantissa boundary (a float-domain
+    split rounds there).  2^24 + 1 itself is not an f32, so the nearest
+    representable neighbours bracket the boundary."""
+    scale = jnp.float32(2.0 ** 16)
+    for q in (2 ** 24 - 1, 2 ** 24, 2 ** 24 + 2, 2 ** 30,
+              -(2 ** 24 - 1), -(2 ** 24 + 2), -(2 ** 30)):
+        x = jnp.float32(q * 2.0 ** -16)          # quantizes to exactly q
+        st_ = intac.limb_add(intac.limb_init((), scale), x)
+        hi, lo = int(st_.hi), int(st_.lo)
+        assert 0 <= lo < (1 << intac.LIMB_SHIFT)       # canonical split
+        assert hi * (1 << intac.LIMB_SHIFT) + lo == q  # exact identity
+        assert float(intac.limb_finalize(st_)) == float(x)
+
+
+def test_limb_resolve_is_decomposition_independent():
+    """limbs_resolve canonicalizes in the integer domain, so any (hi, lo)
+    pair representing the same total resolves to the same bits."""
+    scale = jnp.float32(1.0)
+    a = intac.limbs_resolve(jnp.int32(1000), jnp.int32(2 ** 26 + 123), scale)
+    hi2 = 1000 + ((2 ** 26 + 123) >> intac.LIMB_SHIFT)
+    lo2 = (2 ** 26 + 123) & ((1 << intac.LIMB_SHIFT) - 1)
+    b = intac.limbs_resolve(jnp.int32(hi2), jnp.int32(lo2), scale)
+    assert float(a) == float(b)
+
+
+def test_bin_split_combine_exact_roundtrip():
+    """Exponent-bin digits reconstruct arbitrary f32 exactly within the
+    48-bit window, and the bin sums are bitwise permutation-invariant."""
+    rng = np.random.RandomState(9)
+    x = jnp.asarray((rng.randn(2000) * 10 ** rng.uniform(-4, 4, 2000))
+                    .astype(np.float32))
+    e_ref = intac.bin_ref_exponent(jnp.max(jnp.abs(x)))
+    rec = intac.bin_combine(intac.bin_split(x, e_ref), e_ref)
+    # per-element roundtrip is exact for values within 2^24 of the max
+    big = np.abs(np.asarray(x)) >= float(jnp.max(jnp.abs(x))) * 2.0 ** -24
+    assert np.array_equal(np.asarray(rec)[big], np.asarray(x)[big])
+    perm = rng.permutation(2000)
+    a = intac.bin_combine(jnp.sum(intac.bin_split(x, e_ref), axis=1), e_ref)
+    b = intac.bin_combine(jnp.sum(intac.bin_split(x[perm], e_ref), axis=1),
+                          e_ref)
+    assert float(a) == float(b)
+
+
 def test_limb_accumulator_exact_merge():
     rng = np.random.RandomState(3)
     xs = rng.randn(200, 8).astype(np.float32)
@@ -191,11 +237,12 @@ def test_juggler_slot_bound():
 
 
 def test_accumulate_microbatch_grads():
+    from repro import reduce as R
     def grad_fn(p, mb):
         return jax.tree.map(lambda x: mb["x"].sum() * jnp.ones_like(x), p), \
             jnp.float32(0.0)
     params = {"w": jnp.zeros((3,))}
     mbs = {"x": jnp.arange(8, dtype=jnp.float32).reshape(4, 2)}
-    g, _ = juggler.accumulate_microbatch_grads(
+    g, _ = R.accumulate_microbatch_grads(
         grad_fn, params, mbs, num_microbatches=4, mean=True)
     assert np.allclose(g["w"], np.full(3, 28.0 / 4))

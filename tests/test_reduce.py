@@ -19,7 +19,9 @@ from repro.core import intac, segmented
 from repro.kernels import ops
 
 BACKENDS = ("ref", "blocked", "pallas")
-POLICIES = ("fast", "compensated", "exact")
+POLICIES = ("fast", "compensated", "exact", "exact2", "procrastinate")
+#: the tiers whose integer domains make results bitwise order-independent
+INT_POLICIES = ("exact", "exact2", "procrastinate")
 
 
 def _data(n, d, s, dtype, seed=0):
@@ -77,12 +79,16 @@ def test_mean_op_matches_oracle(policy):
                                atol=1e-3, rtol=1e-3)
 
 
-def test_exact_policy_permutation_invariant():
+@pytest.mark.parametrize("policy", INT_POLICIES)
+def test_integer_policies_permutation_and_blocksize_invariant(policy):
     x = jnp.asarray(np.random.RandomState(5).randn(4096).astype(np.float32))
     perm = np.random.RandomState(6).permutation(4096)
-    a = float(R.reduce(x, policy="exact"))
-    b = float(R.reduce(x[perm], policy="exact"))
-    assert a == b                                  # bitwise
+    a = float(R.reduce(x, policy=policy))
+    b = float(R.reduce(x[perm], policy=policy))
+    c = float(R.reduce(x, policy=policy, block_size=64))
+    d = float(R.reduce(x[perm], policy=policy, backend="pallas",
+                       block_size=256))
+    assert a == b == c == d                        # bitwise
 
 
 def test_exact_policy_tiny_magnitude_stream():
@@ -93,6 +99,59 @@ def test_exact_policy_tiny_magnitude_stream():
     for b in BACKENDS:
         out = float(R.reduce(v, policy="exact", backend=b)[0])
         assert abs(out - 4e-38) < 6e-39      # within one quantum of 2^-127
+
+
+def _ulp(x: float) -> float:
+    return float(np.spacing(np.abs(np.float32(x)), dtype=np.float32))
+
+
+def test_large_n_exact2_and_procrastinate_keep_resolution():
+    """The shrinking-scale defect, pinned: at N = 2^20 the single-limb
+    ``exact`` scale has shrunk to ~2^-10 of max and visibly rounds, while
+    ``exact2`` (fixed dyadic quantum) and ``procrastinate`` (per-exponent
+    bins) stay within 1 ulp of the float64 oracle."""
+    n = 1 << 20
+    rng = np.random.RandomState(42)
+    # dyadic-grid data (multiples of 2^-12): representable exactly by the
+    # fixed ~2^-21-of-max quantum of exact2, far below the ~2^-10 quantum
+    # the single-limb scale has shrunk to at this N
+    x = (rng.randint(-4096, 4097, n) * 2.0 ** -12).astype(np.float32)
+    ref = float(np.sum(x.astype(np.float64)))
+    xj = jnp.asarray(x)
+    errs = {p: abs(float(R.reduce(xj, policy=p, backend="blocked")) - ref)
+            for p in INT_POLICIES}
+    assert errs["exact"] > _ulp(ref)               # the defect
+    assert errs["exact2"] <= _ulp(ref)
+    assert errs["procrastinate"] <= _ulp(ref)
+
+    # procrastinate needs no grid: arbitrary f32 data, still <= 1 ulp
+    y = rng.randn(n).astype(np.float32)
+    refy = float(np.sum(y.astype(np.float64)))
+    erry = abs(float(R.reduce(jnp.asarray(y), policy="procrastinate",
+                              backend="blocked")) - refy)
+    assert erry <= _ulp(refy)
+    assert abs(float(R.reduce(jnp.asarray(y), policy="exact",
+                              backend="blocked")) - refy) > _ulp(refy)
+
+
+def test_exact2_overflow_guards():
+    """Stream length, block size, and block *count* beyond the two-limb
+    headroom analysis are rejected eagerly rather than silently wrapping
+    the int32 limbs."""
+    with pytest.raises(ValueError, match="block"):
+        R.reduce(jnp.ones(1024), policy="exact2", block_size=1024)
+    # the lo limb accumulates one remainder per block: a small block size
+    # shrinks the admissible row count proportionally
+    with pytest.raises(ValueError, match="blocks"):
+        R.reduce(jnp.ones((1 << 21) + 1), policy="exact2", block_size=64)
+    assert float(R.reduce(jnp.ones(1 << 12), policy="exact2",
+                          block_size=64)) == float(1 << 12)
+    with pytest.raises(ValueError, match="headroom"):
+        R.get_policy("exact2").prepare(jnp.ones(((1 << 24) + 1, 1)),
+                                       (1 << 24) + 1)
+    with pytest.raises(ValueError, match="headroom"):
+        R.get_policy("procrastinate").prepare(jnp.ones(((1 << 22) + 1, 1)),
+                                              (1 << 22) + 1)
 
 
 def test_compensated_beats_fast_on_ill_conditioned():
@@ -132,12 +191,13 @@ def test_out_of_range_label_drops_rows_everywhere():
     np.testing.assert_allclose(np.asarray(ref)[:, 0], [1.0, 4.0])
 
 
-def test_dropped_rows_cannot_poison_exact_scale():
-    """A sentinel-labeled row's payload must not influence the exact
-    policy's quantization scale for the rows that are kept."""
+@pytest.mark.parametrize("policy", INT_POLICIES)
+def test_dropped_rows_cannot_poison_integer_scales(policy):
+    """A sentinel-labeled row's payload must not influence the integer
+    tiers' quantization scale / window anchor for the rows that are kept."""
     out = R.reduce(jnp.asarray([[1.0], [1e30]]),
                    segment_ids=jnp.asarray([0, R.OUT_OF_RANGE_LABEL]),
-                   num_segments=1, policy="exact")
+                   num_segments=1, policy=policy)
     assert float(out[0, 0]) == 1.0
 
 
@@ -227,26 +287,15 @@ def test_register_backend_extension_point():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims forward correctly
+# deprecation shims stay removed (CI also errors on repro DeprecationWarnings)
 # ---------------------------------------------------------------------------
 
 
-def test_segment_sum_blocked_shim_forwards():
-    vals, ids = _data(300, 8, 4, jnp.float32, seed=11)
-    with pytest.deprecated_call():
-        old = segmented.segment_sum_blocked(vals, ids, 4, block_size=64)
-    new = R.reduce(vals, segment_ids=ids, num_segments=4,
-                   backend="blocked", block_size=64)
-    assert np.array_equal(np.asarray(old), np.asarray(new))
-
-
-def test_intac_sum_exact_shim_forwards():
-    vals = jnp.asarray(
-        np.random.RandomState(12).randn(256, 8).astype(np.float32))
-    with pytest.deprecated_call():
-        old = ops.intac_sum_exact(vals, jnp.float32(2.0 ** 16))
-    new = R.reduce(vals, policy="exact")
-    np.testing.assert_allclose(np.asarray(old), np.asarray(new), atol=1e-3)
+def test_deprecation_shims_are_gone():
+    from repro.core import juggler
+    assert not hasattr(segmented, "segment_sum_blocked")
+    assert not hasattr(ops, "intac_sum_exact")
+    assert not hasattr(juggler, "accumulate_microbatch_grads")
 
 
 # ---------------------------------------------------------------------------
@@ -256,7 +305,8 @@ def test_intac_sum_exact_shim_forwards():
 
 def test_protocol_instances_are_accumulators():
     for acc in (R.TreeAccumulator(4), R.KahanAccumulator(),
-                R.LimbAccumulator(2.0 ** 16), R.FlashAccumulator()):
+                R.LimbAccumulator(2.0 ** 16), R.BinAccumulator(8.0),
+                R.FlashAccumulator()):
         assert isinstance(acc, R.Accumulator)
 
 
@@ -307,6 +357,31 @@ def test_limb_accumulator_matches_core_and_is_exact():
     for x in xs:
         direct = intac.limb_add(direct, x)
     assert np.array_equal(merged, np.asarray(intac.limb_finalize(direct)))
+
+
+def test_bin_accumulator_exact_merge_and_finalize():
+    """Push/merge are pure integer ops: split halves merge to the same
+    bits as a single pass, and the deferred finalize lands within 1 ulp
+    of the float64 oracle."""
+    rng = np.random.RandomState(21)
+    xs = [jnp.asarray(xr.astype(np.float32))
+          for xr in rng.randn(96, 8) * 10 ** rng.uniform(-3, 3, (96, 1))]
+    acc = R.BinAccumulator(float(max(np.abs(np.asarray(x)).max()
+                                     for x in xs)))
+    a = acc.init(xs[0])
+    b = acc.init(xs[0])
+    for x in xs[:48]:
+        a = acc.push(a, x)
+    for x in xs[48:]:
+        b = acc.push(b, x)
+    merged = np.asarray(acc.finalize(acc.merge(a, b)))
+    direct = acc.init(xs[0])
+    for x in xs:
+        direct = acc.push(direct, x)
+    assert np.array_equal(merged, np.asarray(acc.finalize(direct)))
+    ref = np.sum([np.asarray(x, np.float64) for x in xs], axis=0)
+    assert (np.abs(merged - ref)
+            <= np.spacing(np.abs(ref.astype(np.float32)))).all()
 
 
 def test_flash_accumulator_streams_softmax():
