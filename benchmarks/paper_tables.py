@@ -196,3 +196,46 @@ def table6b_large_n_resolution(rows, *, smoke: bool = False):
             errs.append(f"{pol}={abs(out - ref):.3e}")
         rows.append((f"table6b_resolution_n{n}", n,
                      "abs_err_vs_f64: " + " ".join(errs)))
+
+
+def table7_shard_scaling(rows, *, smoke: bool = False):
+    """Multi-device scaling of the shard_map backend.
+
+    Shards the same segmented stream across 1 / 2 / ... / all visible
+    devices (CPU: simulate a fleet with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), times each
+    shard count against the single-device ``blocked`` schedule, and
+    asserts the tentpole invariant inline: the integer tiers' results are
+    bitwise identical at every shard count.  Host wall-clock on simulated
+    CPU devices measures dispatch overhead, not speedup — the column to
+    read is ``bitwise`` (and, on real fleets, the trend).
+    """
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n, d, s = (1 << 12, 16, 8) if smoke else (1 << 16, 64, 32)
+    rng = np.random.RandomState(23)
+    vals = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    ids = jnp.asarray(rng.randint(0, s, n))
+    counts = sorted({c for c in (1, 2, 4, 8, len(devs))
+                     if c <= len(devs)})
+    for pol in ("fast", "exact2", "procrastinate"):
+        base_fn = jax.jit(lambda v, i, p=pol: repro.reduce(
+            v, segment_ids=i, num_segments=s, policy=p, backend="blocked"))
+        base = np.asarray(base_fn(vals, ids))
+        us0 = _time(base_fn, vals, ids)
+        rows.append((f"table7_{pol}_blocked_us", us0,
+                     f"single-device baseline ({n}x{d} rows, {s} segments)"))
+        for c in counts:
+            mesh = Mesh(np.asarray(devs[:c]), ("shards",))
+            fn = jax.jit(lambda v, i, p=pol, m=mesh: repro.reduce(
+                v, segment_ids=i, num_segments=s, policy=p,
+                backend="shard_map", mesh=m))
+            out = np.asarray(fn(vals, ids))
+            bitwise = bool(np.array_equal(base, out))
+            if pol != "fast":
+                assert bitwise, (pol, c)      # the tentpole invariant
+            us = _time(fn, vals, ids)
+            rows.append((f"table7_{pol}_shard{c}_us", us,
+                         f"bitwise_vs_blocked={bitwise} "
+                         f"speedup_vs_1dev={us0 / us:.2f}x"))

@@ -6,6 +6,12 @@ CPU-host timings of the production JAX layer (relative comparisons only —
 TPU roofline projections live in benchmarks/roofline.py).
 
     PYTHONPATH=src python -m benchmarks.run [--with-roofline] [--smoke]
+
+The multi-device scaling table (table7) shards over however many devices
+are visible; on CPU simulate a fleet first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.run --smoke
 """
 
 from __future__ import annotations
@@ -31,6 +37,7 @@ def main(argv=None) -> None:
         paper_tables.table1_schedule(rows)
         paper_tables.table6_reduce_policies(rows, smoke=True)
         paper_tables.table6b_large_n_resolution(rows, smoke=True)
+        paper_tables.table7_shard_scaling(rows, smoke=True)
     else:
         paper_tables.table1_schedule(rows)
         paper_tables.table2_pis_registers(rows)
@@ -38,6 +45,7 @@ def main(argv=None) -> None:
         paper_tables.table5_intac(rows)
         paper_tables.table6_reduce_policies(rows)
         paper_tables.table6b_large_n_resolution(rows)
+        paper_tables.table7_shard_scaling(rows)
 
     print("name,value,derived")
     for name, val, derived in rows:

@@ -8,11 +8,15 @@ The front door for every reduction is ``repro.reduce``:
     out = reduce(values, segment_ids=ids, num_segments=8,
                  op="mean", policy="exact")     # or call repro.reduce(...)
 
-with accuracy policies (fast / compensated / exact), registered backends
-(ref / blocked / pallas), the streaming ``Accumulator`` protocol, and the
-policy-selectable cross-device ``collective_mean``.
+with accuracy policies (fast / compensated / exact / exact2 /
+procrastinate), registered backends (ref / blocked / pallas / shard_map —
+the last scales across a device mesh with bitwise-identical results for
+the integer tiers), the streaming ``Accumulator`` protocol, and the
+policy-selectable cross-device ``collective_mean``.  See
+docs/architecture.md for the layer map and docs/policies.md for the
+accuracy ladder.
 """
 
 from . import reduce  # noqa: F401  (callable module: repro.reduce(...))
 
-__version__ = "1.1.0"
+__version__ = "1.3.0"

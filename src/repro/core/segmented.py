@@ -10,8 +10,8 @@ register file becomes a bounded VMEM accumulator addressed by segment label.
 
 The front door for segmented reductions is ``repro.reduce`` — one call
 with accuracy policies (fast/compensated/exact/exact2/procrastinate) and
-registered backends (ref/blocked/pallas) all executing the identical
-block schedule.  This module keeps the scatter-add *math oracle*
+registered backends (ref/blocked/pallas/shard_map) all executing the
+identical block schedule.  This module keeps the scatter-add *math oracle*
 (``segment_sum_ref``), the monotone-id utilities, and the flash-partial
 combines.
 

@@ -4,10 +4,13 @@ the distributed-optimization path.
 ``make_shardmap_train_step`` builds a data-parallel training step where the
 gradient reduction is *explicit* rather than XLA-inserted.  The reduction
 itself goes through the ``repro.reduce`` front door: microbatch gradients
-stream through the Accumulator protocol, and the cross-device mean is a
-``repro.reduce.collective_mean`` policy — ``fast`` (plain hierarchical),
-``compensated`` (INTAC compressed + error feedback), or ``exact``
-(full-width integer psum).  The JugglePAC/INTAC distributed tricks:
+stream through the Accumulator protocol (or, with ``microbatch_reduce``,
+through a ``repro.reduce`` segment reduction under any accuracy policy),
+and the cross-device mean is a ``repro.reduce.collective_mean`` policy —
+``fast`` (plain hierarchical), ``compensated`` (INTAC compressed + error
+feedback), ``exact`` (full-width integer psum), ``exact2`` (two-limb
+psum), or ``procrastinate`` (per-bin psum).  The JugglePAC/INTAC
+distributed tricks:
 
   1. **INTAC compressed all-reduce** — gradients are quantized to ``bits``-bit
      fixed point with a shared power-of-two scale, summed in the exact
@@ -46,6 +49,7 @@ def make_shardmap_train_step(cfg: ModelConfig, mesh, *, lr_fn: Callable,
                              num_microbatches: int = 1,
                              compress_bits: Optional[int] = 8,
                              reduce_policy: Optional[str] = None,
+                             microbatch_reduce: Optional[str] = None,
                              moe_impl: str = "dense",
                              remat: bool = False,
                              clip_norm: float = 1.0):
@@ -55,9 +59,19 @@ def make_shardmap_train_step(cfg: ModelConfig, mesh, *, lr_fn: Callable,
     divisible by (dp_size * num_microbatches).
 
     ``reduce_policy`` picks the collective accuracy tier explicitly
-    ("fast" | "compensated" | "exact"); when None it is derived from
-    ``compress_bits`` (bits set => "compensated", else "fast") for
-    backward compatibility.
+    ("fast" | "compensated" | "exact" | "exact2" | "procrastinate"); when
+    None it is derived from ``compress_bits`` (bits set => "compensated",
+    else "fast") for backward compatibility.
+
+    ``microbatch_reduce`` (a policy name) routes the per-shard microbatch
+    gradient mean through the ``repro.reduce`` segment-reduction front
+    door instead of the pairing tree: per-microbatch gradients stack into
+    an (m, |leaf|) stream per leaf and reduce under the chosen accuracy
+    policy, so e.g. ``microbatch_reduce="exact2",
+    reduce_policy="exact2"`` makes the *whole* gradient path — in-shard
+    accumulation and cross-device mean — integer-exact and bitwise
+    independent of microbatch count and device layout.  (The backend is
+    pinned to a local executor: this already runs inside shard_map.)
     """
     axes = tuple(mesh.axis_names)
     policy = reduce_policy or ("compensated" if compress_bits is not None
@@ -77,9 +91,16 @@ def make_shardmap_train_step(cfg: ModelConfig, mesh, *, lr_fn: Callable,
                 lambda x: x.reshape((num_microbatches,
                                      x.shape[0] // num_microbatches)
                                     + x.shape[1:]), batch)
-            grads, (losses, _) = _reduce.accumulate_microbatch_grads(
-                grad_fn, params, mbs, num_microbatches=num_microbatches,
-                mean=True)
+            if microbatch_reduce is not None:
+                # backend pinned local: this already runs inside shard_map
+                grads, (losses, _) = _reduce.reduce_microbatch_grads(
+                    grad_fn, params, mbs,
+                    num_microbatches=num_microbatches,
+                    policy=microbatch_reduce, backend="blocked")
+            else:
+                grads, (losses, _) = _reduce.accumulate_microbatch_grads(
+                    grad_fn, params, mbs, num_microbatches=num_microbatches,
+                    mean=True)
             loss = jnp.mean(losses)
         else:
             grads, (loss, _) = grad_fn(params, batch)

@@ -11,9 +11,10 @@ first-class knobs:
     ``procrastinate`` (exponent-indexed bins — <=1 ulp for arbitrary f32
     absent catastrophic cancellation)
     — ``policy.py``, extensible via ``@register_policy``.
-  * **backend** (executor): ``ref`` / ``blocked`` / ``pallas`` — all run
-    the same block schedule so results match bitwise — ``backends.py``,
-    extensible via ``@register_backend``.
+  * **backend** (executor): ``ref`` / ``blocked`` / ``pallas`` /
+    ``shard_map`` (multi-device) — all run the same block schedule so
+    results match bitwise (integer tiers: at any shard count) —
+    ``backends.py``, extensible via ``@register_backend``.
 
 Entry points:
   ``reduce(values, segment_ids=..., num_segments=..., op=..., ...)``
@@ -32,14 +33,16 @@ Entry points:
 from .accumulator import (Accumulator, BinAccumulator,  # noqa: F401
                           FlashAccumulator, KahanAccumulator,
                           LimbAccumulator, TreeAccumulator,
-                          accumulate_microbatch_grads, merge_tree,
+                          accumulate_microbatch_grads, merge_across,
+                          merge_tree, reduce_microbatch_grads,
                           scan_accumulate)
 from .api import ReduceSpec, reduce  # noqa: F401
 from .backends import (BACKENDS, Backend, OUT_OF_RANGE_LABEL,  # noqa: F401
-                       get_backend, mask_out_of_range, register_backend,
-                       select_backend)
+                       ambient_mesh, default_mesh, get_backend,
+                       mask_out_of_range, register_backend, select_backend,
+                       select_local_backend)
 from .collective import (COLLECTIVE_POLICIES, collective_mean,  # noqa: F401
-                         collective_mean_tree)
+                         collective_mean_tree, merge_carry_across)
 from .policy import (POLICIES, Policy, get_policy,  # noqa: F401
                      register_policy, two_sum)
 
@@ -59,10 +62,12 @@ __all__ = [
     "reduce", "ReduceSpec", "OUT_OF_RANGE_LABEL",
     "Policy", "POLICIES", "register_policy", "get_policy", "two_sum",
     "Backend", "BACKENDS", "register_backend", "get_backend",
-    "select_backend", "mask_out_of_range",
+    "select_backend", "select_local_backend", "mask_out_of_range",
+    "ambient_mesh", "default_mesh",
     "Accumulator", "TreeAccumulator", "KahanAccumulator",
     "LimbAccumulator", "BinAccumulator", "FlashAccumulator",
-    "scan_accumulate", "merge_tree",
-    "accumulate_microbatch_grads",
+    "scan_accumulate", "merge_tree", "merge_across",
+    "accumulate_microbatch_grads", "reduce_microbatch_grads",
     "collective_mean", "collective_mean_tree", "COLLECTIVE_POLICIES",
+    "merge_carry_across",
 ]

@@ -45,7 +45,23 @@ from .policy import two_sum
 
 @runtime_checkable
 class Accumulator(Protocol):
-    """Structural protocol: anything with init/push/merge/finalize."""
+    """Structural protocol: anything with init/push/merge/finalize.
+
+    ``merge`` is the declared combiner — it is what ``merge_tree`` folds
+    with locally and what ``merge_across`` folds with across devices, so
+    stating it once gives a state machine both a streaming and a
+    distributed face.
+
+    >>> import jax.numpy as jnp
+    >>> acc = KahanAccumulator()
+    >>> st = acc.init(jnp.zeros(2))
+    >>> st = acc.push(st, jnp.asarray([1.0, 2.0]))
+    >>> st = acc.push(st, jnp.asarray([3.0, 4.0]))
+    >>> [float(v) for v in acc.finalize(st)]
+    [4.0, 6.0]
+    >>> isinstance(acc, Accumulator)
+    True
+    """
 
     def init(self, template) -> Any: ...
 
@@ -118,6 +134,15 @@ class LimbAccumulator:
 
     ``scale`` is the shared power-of-two from ``intac.choose_scale`` — the
     a-priori bit-width parameterization; push/merge are pure integer ops.
+
+    >>> import jax.numpy as jnp
+    >>> acc = LimbAccumulator(2.0 ** 16)
+    >>> a, b = acc.init(jnp.zeros(1)), acc.init(jnp.zeros(1))
+    >>> for _ in range(10):
+    ...     a = acc.push(a, jnp.asarray([0.5]))
+    ...     b = acc.push(b, jnp.asarray([0.25]))
+    >>> float(acc.finalize(acc.merge(a, b))[0])     # exact, order-free
+    7.5
     """
 
     def __init__(self, scale):
@@ -146,6 +171,12 @@ class BinAccumulator:
     happens in ``finalize``.  Up to ``intac.BIN_MAX_TERMS`` (= 2^22)
     pushes accumulate with no bin overflow.
     """
+
+    #: every state leaf merges by addition, so a cross-device merge may
+    #: lower to one associative psum per leaf (see ``merge_across``).
+    #: LimbAccumulator cannot claim this: its state carries the shared
+    #: ``scale`` leaf, which ``merge`` keeps rather than adds.
+    merge_is_add = True
 
     def __init__(self, max_abs):
         self.e_ref = intac.bin_ref_exponent(max_abs)
@@ -221,6 +252,82 @@ def merge_tree(acc: Accumulator, states):
             nxt.append(items[-1])
         items = nxt
     return items[0]
+
+
+def merge_across(acc: Accumulator, state, axis_names):
+    """Cross-device merge of per-device accumulator states (inside
+    shard_map).
+
+    Every ``Accumulator`` states its combiner as ``merge``; this is the
+    collective face of that contract — the same role
+    ``collective.merge_carry_across`` plays for policy carries.  An
+    accumulator declaring ``merge_is_add`` (every state leaf merges by
+    plain addition, e.g. BinAccumulator) reduces with one associative
+    ``psum`` per leaf; otherwise each leaf all-gathers along
+    ``axis_names`` and the per-device states fold strictly in device
+    order, so the combine schedule is a pure function of the mesh —
+    deterministic, and exact whenever ``merge`` is (LimbAccumulator,
+    BinAccumulator).
+
+    Example (one-device mesh; any device count works the same way):
+
+    >>> import jax, jax.numpy as jnp, numpy as np
+    >>> from jax.sharding import Mesh, PartitionSpec as P
+    >>> from jax.experimental.shard_map import shard_map
+    >>> mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    >>> acc = KahanAccumulator()
+    >>> def f(x):
+    ...     st = acc.push(acc.init(x), x)          # local partial stream
+    ...     return acc.finalize(merge_across(acc, st, ("data",)))
+    >>> out = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+    ...                 check_rep=False)(jnp.asarray([2.0, 3.0]))
+    >>> [float(v) for v in out]
+    [2.0, 3.0]
+    """
+    axes = tuple(axis_names)
+    if getattr(acc, "merge_is_add", False):
+        return jax.tree.map(lambda x: jax.lax.psum(x, axes), state)
+    gathered = jax.tree.map(
+        lambda x: jax.lax.all_gather(x, axes, axis=0), state)
+    nshards = jax.tree.leaves(gathered)[0].shape[0]
+    merged = jax.tree.map(lambda x: x[0], gathered)
+    for k in range(1, nshards):
+        merged = acc.merge(merged, jax.tree.map(lambda x: x[k], gathered))
+    return merged
+
+
+def reduce_microbatch_grads(grad_fn, params, microbatches, *,
+                            num_microbatches: int, policy: str,
+                            backend=None, mesh=None):
+    """Microbatch gradient mean through the ``repro.reduce`` front door.
+
+    The policy-exact alternative to ``accumulate_microbatch_grads``:
+    per-microbatch gradients stack into an (m, |leaf|) stream per leaf
+    (one row per microbatch = one schedule block) and mean under any
+    accuracy policy — with the integer tiers, the result is bitwise
+    independent of microbatch count and executor.  Costs m live gradient
+    copies instead of O(log m).  ``backend=None`` auto-selects; pass
+    ``mesh`` to route the reduction through the ``shard_map`` backend
+    explicitly (ambient-mesh auto-selection is deliberately inert inside
+    a jit trace, and for m-row streams the local executor is normally
+    the right choice anyway).  Returns (mean_grads, aux_stacked); leaf
+    dtypes are preserved.
+    """
+    from .api import ReduceSpec, reduce as _reduce
+    spec = ReduceSpec(op="mean", policy=policy, backend=backend,
+                      block_size=1)
+
+    def scan_step(_, mb):
+        g, aux = grad_fn(params, mb)
+        return 0, (g, aux)
+
+    _, (stacked, aux) = jax.lax.scan(scan_step, 0, microbatches)
+    grads = jax.tree.map(
+        lambda g: _reduce(
+            g.astype(jnp.float32).reshape(num_microbatches, -1),
+            spec=spec, mesh=mesh)
+        .reshape(g.shape[1:]).astype(g.dtype), stacked)
+    return grads, aux
 
 
 def accumulate_microbatch_grads(grad_fn, params, microbatches, *,

@@ -28,8 +28,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .backends import (OUT_OF_RANGE_LABEL, get_backend, mask_out_of_range,
-                       select_backend)
+from .backends import (OUT_OF_RANGE_LABEL, ambient_mesh, default_mesh,
+                       get_backend, mask_out_of_range, select_backend)
 from .policy import get_policy
 
 
@@ -37,8 +37,16 @@ from .policy import get_policy
 class ReduceSpec:
     """Static description of a reduction — hashable, so jit-cache-friendly.
 
-    ``backend=None`` means auto-select (TPU kernel on TPU, scanned blocks
-    elsewhere); ``interpret=None`` lets the pallas backend decide.
+    ``backend=None`` means auto-select (shard_map under a multi-device
+    mesh, TPU kernel on TPU, scanned blocks elsewhere); ``interpret=None``
+    lets the pallas backend decide.  Build one spec, reuse it across calls
+    and jit boundaries:
+
+    >>> spec = ReduceSpec(op="mean", policy="exact2", backend="blocked")
+    >>> spec.replace(op="sum").op
+    'sum'
+    >>> spec == ReduceSpec(op="mean", policy="exact2", backend="blocked")
+    True
     """
 
     op: str = "sum"                   # "sum" | "mean"
@@ -59,11 +67,14 @@ class ReduceSpec:
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "num_segments",
-                                             "segmented", "squeeze_d"))
+                                             "segmented", "squeeze_d",
+                                             "mesh", "axis_names"))
 def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
-              segmented: bool, squeeze_d: bool):
+              segmented: bool, squeeze_d: bool, mesh=None, axis_names=None):
     policy = get_policy(spec.policy)
     n, d = values.shape
+    # ``reduce`` resolved backend=None before the jit boundary, so specs
+    # arriving here are concrete; keep the fallback for direct callers.
     backend = (get_backend(spec.backend) if spec.backend is not None
                else select_backend(policy))
     if not backend.supports(policy):
@@ -96,9 +107,11 @@ def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
         values = jnp.where((segment_ids >= 0)[:, None], values,
                            jnp.zeros((), values.dtype))
         domain, ctx = policy.prepare(values, n)
+        run_kw = ({"mesh": mesh, "axis_names": axis_names}
+                  if backend.distributed else {})
         carry = backend.run(domain, segment_ids, num_segments,
                             policy=policy, block_size=spec.block_size,
-                            interpret=spec.interpret)
+                            interpret=spec.interpret, **run_kw)
         out = policy.finalize(carry, ctx)            # (S, D) f32
 
     if spec.op == "mean" and n > 0:
@@ -125,6 +138,7 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
            op: str = "sum", policy: str = "fast",
            backend: Optional[str] = None, block_size: int = 512,
            interpret: Optional[bool] = None,
+           mesh=None, axis_names=None,
            spec: Optional[ReduceSpec] = None) -> jnp.ndarray:
     """Reduce a value stream, optionally partitioned into labeled sets.
 
@@ -138,19 +152,73 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
       op: "sum" or "mean" (mean counts only in-range rows).
       policy: accuracy tier — "fast", "compensated", "exact", "exact2",
         or "procrastinate" (see ``repro.reduce.policy`` for the ladder).
-      backend: executor — "ref", "blocked", "pallas", or None to
-        auto-select.
+      backend: executor — "ref", "blocked", "pallas", "shard_map", or
+        None to auto-select (shard_map under a multi-device mesh, the
+        TPU kernel on TPU, blocked elsewhere).
       block_size: rows per schedule block (the paper's cycle granularity).
       interpret: force/forbid pallas interpret mode (None = auto).
-      spec: a prebuilt ``ReduceSpec``; overrides the per-call knobs above.
+      mesh: the device mesh for a distributed backend; None uses the
+        ambient ``with mesh:`` context, else one flat axis over every
+        visible device.  Rejected for single-device backends.  Note the
+        ambient mesh only steers *auto-selection* for top-level (eager)
+        calls — inside jit/shard_map-traced code pass ``mesh=`` (or
+        ``backend="shard_map"``) explicitly; see ``select_backend``.
+      axis_names: mesh axes to shard the stream over (default: all of
+        the mesh's axes); only meaningful with a distributed backend.
+      spec: a prebuilt ``ReduceSpec``; overrides the per-call knobs above
+        (``mesh``/``axis_names`` are environment, not spec, and still
+        apply).
 
     Returns:
       f32 array: (num_segments, D) / (num_segments,) when segmented,
       (D,) / scalar otherwise.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.reduce import reduce
+    >>> float(reduce(jnp.arange(4.0)))                       # whole stream
+    6.0
+    >>> out = reduce(jnp.arange(6.0),                        # three sets
+    ...              segment_ids=jnp.asarray([0, 0, 1, 1, 1, 2]),
+    ...              num_segments=3)
+    >>> [float(v) for v in out]
+    [1.0, 9.0, 5.0]
+    >>> float(reduce(jnp.arange(6.0), policy="exact2",       # multi-device
+    ...              backend="shard_map"))
+    15.0
     """
     if spec is None:
         spec = ReduceSpec(op=op, policy=policy, backend=backend,
                           block_size=block_size, interpret=interpret)
+    # Resolve auto-selection and the mesh *before* the jit boundary: the
+    # dispatch cache keys on the concrete (spec, mesh, axis_names), so an
+    # activated-then-deactivated ambient mesh can never serve a stale
+    # cached executor choice.
+    pol = get_policy(spec.policy)
+    auto = spec.backend is None
+    bk = (select_backend(pol, mesh=mesh) if auto
+          else get_backend(spec.backend))
+    spec = spec if spec.backend == bk.name else spec.replace(backend=bk.name)
+    if bk.distributed:
+        if mesh is None:
+            mesh = ambient_mesh() or default_mesh()
+        if axis_names is not None:
+            axis_names = tuple(axis_names)
+    elif auto:
+        # auto-selection declined the mesh (single device, or unsupported
+        # policy): run the local backend.  A 1-device mesh dropping to the
+        # local path is the intended "scale if useful" contract, but
+        # explicit axis_names state distributed intent — refuse rather
+        # than silently reduce on one device.
+        if axis_names is not None:
+            raise ValueError(
+                "axis_names was given but backend auto-selection chose a "
+                "single-device executor (no multi-device mesh in reach); "
+                "pass backend='shard_map' and/or a multi-device mesh")
+        mesh = None
+    elif mesh is not None or axis_names is not None:
+        raise ValueError(f"backend {bk.name!r} is single-device; mesh/"
+                         f"axis_names only apply to distributed backends "
+                         f"(e.g. 'shard_map')")
     values = jnp.asarray(values)
     if values.ndim not in (1, 2):
         raise ValueError(f"values must be (N,) or (N, D), "
@@ -174,4 +242,4 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
 
     return _dispatch(values, segment_ids, spec=spec,
                      num_segments=int(num_segments), segmented=segmented,
-                     squeeze_d=squeeze_d)
+                     squeeze_d=squeeze_d, mesh=mesh, axis_names=axis_names)

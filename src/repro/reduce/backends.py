@@ -1,4 +1,4 @@
-"""Backend registry for ``repro.reduce`` — one schedule, three executors.
+"""Backend registry for ``repro.reduce`` — one schedule, four executors.
 
 Every backend runs the *same* fixed block schedule (the JugglePAC pairing
 contract): the (N, D) stream is padded to row blocks with
@@ -8,18 +8,29 @@ this block by label"), and blocks fold into the policy carry strictly in
 stream order.  Because the schedule — not the executor — defines the
 addition order, results are bitwise identical across backends:
 
-  * ``ref``      — unrolled Python loop over blocks; the readable oracle of
-                   the schedule (not of the math — that is
-                   ``core.segmented.segment_sum_ref``).
-  * ``blocked``  — ``lax.scan`` over blocks; jit-friendly, the CPU/GPU
-                   default.
-  * ``pallas``   — the TPU kernel (interpret mode off-TPU), with the VMEM
-                   accumulator budget enforced by label-space tiling —
-                   "2–8 PIS registers, not a BRAM".
+  * ``ref``       — unrolled Python loop over blocks; the readable oracle
+                    of the schedule (not of the math — that is
+                    ``core.segmented.segment_sum_ref``).
+  * ``blocked``   — ``lax.scan`` over blocks; jit-friendly, the CPU/GPU
+                    default.
+  * ``pallas``    — the TPU kernel (interpret mode off-TPU), with the VMEM
+                    accumulator budget enforced by label-space tiling —
+                    "2–8 PIS registers, not a BRAM".
+  * ``shard_map`` — the multi-device executor: whole blocks of the same
+                    schedule split across a device mesh, each shard runs a
+                    local backend over its blocks, and the per-shard policy
+                    carries merge with the policy's associative combiner
+                    (``merge_carry_across``) before one finalize.  Because
+                    the integer tiers' carries merge by associative int32
+                    addition, their results are bitwise identical to the
+                    single-device schedule *at any shard count*; the float
+                    tiers keep documented tolerance instead (see
+                    docs/architecture.md).
 
-New executors (GPU pallas, shard_map multi-device, ...) drop in with
-``@register_backend``; the supported-policies capability set gates both
-explicit selection and ``select_backend``'s auto choice.
+New executors (GPU pallas, ...) drop in with ``@register_backend``; the
+supported-policies capability set gates both explicit selection and
+``select_backend``'s auto choice, and ``distributed=True`` marks executors
+that take the mesh/axis plumbing.
 """
 
 from __future__ import annotations
@@ -29,6 +40,8 @@ from typing import Callable, Dict, FrozenSet, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from .policy import Policy
 
@@ -55,16 +68,35 @@ class Backend:
     run: Callable
     policies: FrozenSet[str]          # capability: policies it can execute
     description: str = ""
+    #: distributed executors additionally accept ``mesh=``/``axis_names=``
+    #: (threaded by ``reduce`` from its own kwargs or the ambient mesh)
+    distributed: bool = False
 
     def supports(self, policy: Policy) -> bool:
         return "*" in self.policies or policy.name in self.policies
 
 
-def register_backend(name: str, *, policies, description: str = ""):
+def register_backend(name: str, *, policies, description: str = "",
+                     distributed: bool = False):
     """Decorator: register ``fn`` as backend ``name``.
 
     ``policies``: iterable of policy names the executor implements, or the
     string "*" for schedule-generic executors that thread any policy carry.
+    ``distributed=True`` marks executors that want the mesh plumbing
+    (``run`` then also receives ``mesh=`` and ``axis_names=``).
+
+    >>> import jax.numpy as jnp
+    >>> import repro
+    >>> @register_backend("doubled_demo", policies=("fast",),
+    ...                   description="blocked, then doubled (demo)")
+    ... def _run_doubled(values, ids, n, *, policy, block_size=512,
+    ...                  interpret=None):
+    ...     carry = get_backend("blocked").run(
+    ...         values, ids, n, policy=policy, block_size=block_size)
+    ...     return tuple(2 * c for c in carry)
+    >>> float(repro.reduce(jnp.arange(4.0), backend="doubled_demo"))
+    12.0
+    >>> del BACKENDS["doubled_demo"]          # keep the registry clean
     """
     def deco(fn):
         if isinstance(policies, str):
@@ -77,7 +109,8 @@ def register_backend(name: str, *, policies, description: str = ""):
         else:
             caps = frozenset(policies)
         BACKENDS[name] = Backend(name=name, run=fn, policies=caps,
-                                 description=description)
+                                 description=description,
+                                 distributed=distributed)
         return fn
     return deco
 
@@ -90,14 +123,68 @@ def get_backend(name: str) -> Backend:
                          f"{sorted(BACKENDS)}") from None
 
 
-def select_backend(policy: Policy) -> Backend:
-    """Auto-selection: the TPU kernel on TPU, the scanned form elsewhere.
+def ambient_mesh() -> Optional[Mesh]:
+    """The mesh of an enclosing ``with mesh:`` context, or None.
 
-    The pallas wrapper already tiles the label space to its VMEM budget, so
-    accumulator size never disqualifies it; off-TPU the kernel runs in
-    interpret mode (a validation path, not a fast path), so ``blocked`` is
-    the performance default.
+    The ``shard_map`` backend and ``select_backend`` both consult this so
+    ``repro.reduce(...)`` scales out without explicit plumbing whenever the
+    caller already activated a mesh.  Resolution happens *before* the jit
+    boundary (in ``reduce``), so the dispatch cache keys on the concrete
+    mesh, never on mutable thread state.
     """
+    try:
+        from jax._src import mesh as _mesh_lib      # no public accessor yet
+        m = _mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except (ImportError, AttributeError):           # jax internals moved
+        # degrade loudly, not silently: `with mesh:` auto-selection stops
+        # working until this accessor is updated (tests pin the behavior)
+        import warnings
+        warnings.warn("repro.reduce: cannot read the ambient jax mesh "
+                      "from this jax version; `with mesh:` backend "
+                      "auto-selection is disabled — pass mesh= explicitly",
+                      RuntimeWarning, stacklevel=2)
+        return None
+
+
+def default_mesh() -> Mesh:
+    """One flat 'shards' axis over every visible device."""
+    return Mesh(np.asarray(jax.devices()), ("shards",))
+
+
+def select_backend(policy: Policy, mesh: Optional[Mesh] = None) -> Backend:
+    """Auto-selection: shard_map under a multi-device mesh, the TPU kernel
+    on TPU, the scanned form elsewhere.
+
+    A mesh (explicit, or — for top-level untraced calls only — the
+    ambient ``with mesh:`` context) spanning more than one device selects
+    the ``shard_map`` backend, which shards the stream and runs the local
+    auto-choice per shard.  The pallas wrapper already
+    tiles the label space to its VMEM budget, so accumulator size never
+    disqualifies it; off-TPU the kernel runs in interpret mode (a
+    validation path, not a fast path), so ``blocked`` is the performance
+    default.
+    """
+    if mesh is None:
+        # Honor the ambient mesh only for top-level (untraced) calls:
+        # reduce() is also called from inside jit/shard_map-traced model
+        # code (MoE combine, serving means), where auto-escalating to a
+        # nested shard_map would be wrong.  An explicit mesh= always wins.
+        try:
+            clean = jax.core.trace_state_clean()
+        except Exception:
+            clean = False       # can't tell => never auto-escalate
+        mesh = ambient_mesh() if clean else None
+    if mesh is not None and mesh.size > 1:
+        cand = get_backend("shard_map")
+        if cand.supports(policy):
+            return cand
+    return select_local_backend(policy)
+
+
+def select_local_backend(policy: Policy) -> Backend:
+    """The single-device auto-choice (also each shard_map shard's inner
+    executor): pallas on TPU when capable, blocked otherwise."""
     if jax.default_backend() == "tpu":
         cand = get_backend("pallas")
         if cand.supports(policy):
@@ -210,3 +297,61 @@ def _run_pallas(values, segment_ids, num_segments, *, policy: Policy,
         return parts[0]
     return tuple(jnp.concatenate([p[i] for p in parts], axis=0)
                  for i in range(policy.carry_len))
+
+
+@register_backend("shard_map", policies="*", distributed=True,
+                  description="multi-device: whole schedule blocks per "
+                              "shard, carries merged with the policy's "
+                              "associative combiner")
+def _run_shard_map(values, segment_ids, num_segments, *, policy: Policy,
+                   block_size: int = 512, interpret: Optional[bool] = None,
+                   mesh: Optional[Mesh] = None, axis_names=None):
+    """Split the block schedule across a device mesh.
+
+    The (N, D) stream pads to ``nshards * block_size`` granularity with
+    ``OUT_OF_RANGE_LABEL`` rows (sentinel blocks contribute the policy
+    identity, so uneven N costs nothing but the padding), so every shard
+    receives *whole, contiguous* schedule blocks.  Each shard folds its
+    blocks with the local auto-backend — the identical kernel body the
+    single-device path runs — and the per-shard carries merge via
+    ``collective.merge_carry_across`` with the policy's combiner.  One
+    finalize happens on the merged carry, outside this function, exactly
+    as on every other backend.
+
+    Invariant: for the integer tiers (exact / exact2 / procrastinate) the
+    result is bitwise identical to the single-device schedule at any
+    shard count, because ``prepare`` already fixed the global quantization
+    scale / window anchor and integer carry addition is associative.  The
+    float tiers (fast / compensated) change their cross-shard combine
+    order with the shard count — documented tolerance, not bitwise.
+    """
+    # deferred: collective imports this module's sentinel at load time
+    from .collective import merge_carry_across
+    from jax.experimental.shard_map import shard_map
+    if mesh is None:
+        mesh = ambient_mesh() or default_mesh()
+    axes = tuple(axis_names) if axis_names else tuple(mesh.axis_names)
+    unknown = [a for a in axes if a not in mesh.axis_names]
+    if unknown:
+        raise ValueError(f"shard_map backend: axis_names {unknown} not in "
+                         f"mesh axes {mesh.axis_names}")
+    nshards = int(np.prod([mesh.shape[a] for a in axes]))
+    inner = select_local_backend(policy)
+
+    n, d = values.shape
+    pad = (-n) % (nshards * block_size)
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        segment_ids = jnp.pad(segment_ids, (0, pad),
+                              constant_values=OUT_OF_RANGE_LABEL)
+
+    def shard_body(v, ids):
+        carry = inner.run(v, ids, num_segments, policy=policy,
+                          block_size=block_size, interpret=interpret)
+        return merge_carry_across(policy, carry, axes)
+
+    row_spec = axes if len(axes) > 1 else axes[0]
+    return shard_map(shard_body, mesh=mesh,
+                     in_specs=(P(row_spec, None), P(row_spec)),
+                     out_specs=P(), check_rep=False)(
+                         values, segment_ids.astype(jnp.int32))

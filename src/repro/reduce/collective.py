@@ -32,6 +32,13 @@ compensated passes ``residual`` through untouched (including ``None``;
 only compensated materializes an error-feedback state).
 
 Must be called inside ``shard_map`` (they use named-axis collectives).
+
+``merge_carry_across`` is the second face of this module: where
+``collective_mean`` reduces *raw gradients* across devices, it reduces
+*policy carries* — the partial block-schedule state each shard of the
+``shard_map`` backend produced — with the policy's own associative
+combiner (one integer ``psum`` per carry component for the exact tiers,
+a gathered in-order two-sum fold for compensated).
 """
 
 from __future__ import annotations
@@ -42,9 +49,33 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import intac
+from .policy import Policy
 
 COLLECTIVE_POLICIES = ("fast", "compensated", "exact", "exact2",
                        "procrastinate")
+
+
+def merge_carry_across(policy: Policy, carry, axis_names):
+    """Merge per-shard policy carries across mesh axes (inside shard_map).
+
+    ``carry`` is the policy carry tuple a local backend produced from a
+    shard's blocks.  When ``policy.merge`` is plain addition (every
+    integer tier: int32 sums are associative, so any psum topology gives
+    the same bits — the ``intac_psum2``/``bin_psum`` argument applied to
+    carries that are *already* in the integer domain), each component
+    psums directly.  Otherwise the carries all-gather and fold strictly
+    in device order with ``policy.merge``, which pins the combine
+    schedule the way the block schedule pins per-shard order.
+    """
+    axes = tuple(axis_names)
+    if policy.merge_is_add:
+        return tuple(jax.lax.psum(c, axes) for c in carry)
+    gathered = tuple(jax.lax.all_gather(c, axes, axis=0) for c in carry)
+    nshards = gathered[0].shape[0]
+    merged = tuple(g[0] for g in gathered)
+    for k in range(1, nshards):
+        merged = policy.merge(merged, tuple(g[k] for g in gathered))
+    return merged
 
 
 def collective_mean(x: jnp.ndarray, axis_names: Sequence[str], *,
@@ -56,6 +87,18 @@ def collective_mean(x: jnp.ndarray, axis_names: Sequence[str], *,
     ``axis_names`` is ordered outermost (slowest, e.g. 'pod') to innermost
     (fastest, e.g. 'data'); reductions run innermost-first to match the
     physical topology.  Returns (mean, new_residual).
+
+    Must run inside ``shard_map`` — e.g. on a one-device mesh:
+
+    >>> import jax, jax.numpy as jnp, numpy as np
+    >>> from jax.sharding import Mesh, PartitionSpec as P
+    >>> from jax.experimental.shard_map import shard_map
+    >>> mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    >>> f = lambda x: collective_mean(x, ("data",), policy="exact2")[0]
+    >>> out = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+    ...                 check_rep=False)(jnp.asarray([1.5, -2.0]))
+    >>> [float(v) for v in out]
+    [1.5, -2.0]
     """
     axes = tuple(axis_names)
     if policy == "fast":

@@ -34,7 +34,7 @@ same block schedule (so a policy swap never changes the data movement):
 The three integer tiers are bitwise order-independent: any block size,
 backend, input permutation, or device layout produces identical bits.
 
-A policy owns three hooks, each pure and shape-polymorphic:
+A policy owns four hooks, each pure and shape-polymorphic:
 
   ``prepare(values, num_terms)``      -> (domain_values, ctx)
   ``init / update``                   -> the per-block carry (a tuple of
@@ -42,6 +42,10 @@ A policy owns three hooks, each pure and shape-polymorphic:
                                          thread identically; the pallas
                                          kernel executes ``update`` inside
                                          its grid loop)
+  ``merge(a, b)``                     -> combine two partial carries
+                                         (cross-shard / cross-device); the
+                                         associative combiner the
+                                         ``shard_map`` backend folds with
   ``finalize(carry, ctx)``            -> (S, D) f32
 
 New tiers register with ``@register_policy`` and immediately work on every
@@ -69,13 +73,40 @@ POLICIES: Dict[str, "Policy"] = {}
 
 
 def register_policy(cls):
-    """Class decorator: instantiate and add to the policy registry."""
+    """Class decorator: instantiate and add to the policy registry.
+
+    The new tier immediately works on every schedule-generic backend
+    (``ref``/``blocked``/``shard_map``) — only ``pallas`` gates on its
+    validated capability set.
+
+    >>> import jax.numpy as jnp
+    >>> import repro
+    >>> @register_policy
+    ... class _NegatedPolicy(Policy):
+    ...     '''Toy tier: accumulate in f32, negate once at finalize.'''
+    ...     name = "negated_demo"
+    ...     def finalize(self, carry, ctx):
+    ...         return -carry[0]
+    >>> float(repro.reduce(jnp.arange(4.0), policy="negated_demo"))
+    -6.0
+    >>> del POLICIES["negated_demo"]          # keep the registry clean
+    """
     inst = cls()
     POLICIES[inst.name] = inst
     return cls
 
 
 def get_policy(name: str) -> "Policy":
+    """Look up a registered policy instance by name.
+
+    >>> get_policy("exact2").carry_len
+    2
+    >>> get_policy("psychic")
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown policy 'psychic'; registered: ['compensated', \
+'exact', 'exact2', 'fast', 'procrastinate']
+    """
     try:
         return POLICIES[name]
     except KeyError:
@@ -97,6 +128,12 @@ class Policy:
     #: largest block *count* the per-block carry headroom covers (None =
     #: any); ``reduce`` validates ceil(n / block_size) against it
     max_blocks: Optional[int] = None
+    #: True when ``merge`` is plain elementwise addition, so a cross-device
+    #: carry merge may lower to one ``lax.psum`` per carry component (the
+    #: integer tiers: associative, any reduction topology gives the same
+    #: bits).  False forces the gathered in-order fold (compensated: its
+    #: two-sum merge is order-sensitive, so the fold order must be pinned).
+    merge_is_add: bool = True
 
     def prepare(self, values: jnp.ndarray, num_terms: int):
         """Map raw (N, D) values into the accumulation domain.
@@ -112,6 +149,18 @@ class Policy:
 
     def update(self, carry, contrib):
         return (carry[0] + contrib,)
+
+    def merge(self, a, b):
+        """Combine two partial carries (the cross-shard combiner).
+
+        Semantics: ``merge(run(blocks[:k]), run(blocks[k:]))`` must equal
+        ``run(blocks)`` — exactly for the integer tiers, to documented
+        tolerance for the float tiers.  The default (elementwise add) is
+        correct for every policy whose ``update`` is itself an add into
+        the carry; order-sensitive carries override it and clear
+        ``merge_is_add``.
+        """
+        return tuple(x + y for x, y in zip(a, b))
 
     def finalize(self, carry, ctx) -> jnp.ndarray:
         return carry[0]
@@ -130,6 +179,7 @@ class CompensatedPolicy(Policy):
 
     name = "compensated"
     carry_len = 2
+    merge_is_add = False            # two-sum merge is order-sensitive
 
     def init(self, num_segments: int, d: int):
         z = jnp.zeros((num_segments, d), jnp.float32)
@@ -139,6 +189,12 @@ class CompensatedPolicy(Policy):
         acc, comp = carry
         s, e = two_sum(acc, contrib)
         return (s, comp + e)
+
+    def merge(self, a, b):
+        """Two-sum the partial sums, pool the compensations + the new
+        rounding error — the cross-shard analogue of ``update``."""
+        s, e = two_sum(a[0], b[0])
+        return (s, a[1] + b[1] + e)
 
     def finalize(self, carry, ctx) -> jnp.ndarray:
         acc, comp = carry

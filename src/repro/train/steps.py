@@ -27,12 +27,28 @@ from repro.optim import adamw
 def make_train_step(cfg: ModelConfig, *, lr_fn: Callable,
                     moe_impl: str = "capacity", remat: bool = True,
                     clip_norm: float = 1.0, weight_decay: float = 0.1,
-                    logits_pspec=None, num_microbatches: int = 1):
+                    logits_pspec=None, num_microbatches: int = 1,
+                    grad_reduce: Optional[str] = None,
+                    grad_reduce_mesh=None):
     """num_microbatches > 1: the batch splits along dim 0 and gradients
     accumulate through the JugglePAC binary-counter pairing tree
     (repro.reduce.TreeAccumulator) — activation memory scales down by the
     microbatch count while only O(log m) gradient copies stay live, and the
-    fixed pairing schedule keeps the result independent of the grouping."""
+    fixed pairing schedule keeps the result independent of the grouping.
+
+    ``grad_reduce`` (a policy name: "fast" ... "procrastinate") instead
+    routes the microbatch-gradient mean through the ``repro.reduce`` front
+    door (``reduce_microbatch_grads``): per-microbatch gradients stack
+    into an (m, |leaf|) stream and reduce leaf-by-leaf under the chosen
+    accuracy policy — for the integer tiers the mean is bitwise
+    independent of microbatch count and executor.  Costs m live gradient
+    copies instead of O(log m); pick it when accuracy/determinism of the
+    gradient sum matters more than peak memory.  ``grad_reduce_mesh``
+    additionally routes each leaf's reduction through the ``shard_map``
+    backend on that mesh; leave it None (local executor) unless you
+    specifically want the reduction itself distributed — the bits are
+    identical either way for the integer tiers, and an m-row stream per
+    leaf rarely merits per-leaf collectives."""
     from repro import reduce as _reduce
 
     def grad_fn(p, b):
@@ -49,9 +65,17 @@ def make_train_step(cfg: ModelConfig, *, lr_fn: Callable,
                 lambda x: x.reshape(
                     (num_microbatches, x.shape[0] // num_microbatches)
                     + x.shape[1:]), batch)
-            grads, (losses, metricses) = _reduce.accumulate_microbatch_grads(
-                grad_fn, params, mbs, num_microbatches=num_microbatches,
-                mean=True)
+            if grad_reduce is not None:
+                grads, (losses, metricses) = \
+                    _reduce.reduce_microbatch_grads(
+                        grad_fn, params, mbs,
+                        num_microbatches=num_microbatches,
+                        policy=grad_reduce, mesh=grad_reduce_mesh)
+            else:
+                grads, (losses, metricses) = \
+                    _reduce.accumulate_microbatch_grads(
+                        grad_fn, params, mbs,
+                        num_microbatches=num_microbatches, mean=True)
             loss = jnp.mean(losses)
             metrics = jax.tree.map(jnp.mean, metricses)
         else:

@@ -108,6 +108,16 @@ det = all(np.array_equal(a, b) for a, b in zip(jax.tree.leaves(p1), jax.tree.lea
 s2 = jax.jit(make_shardmap_train_step(cfg, mesh, lr_fn=lr_fn,
       num_microbatches=1, compress_bits=None))
 p2, o2, r2, m2 = s2(params, opt, res, batch)
+# integer-exact end to end: microbatch accumulation through the
+# repro.reduce front door + exact2 cross-device mean
+s3 = jax.jit(make_shardmap_train_step(cfg, mesh, lr_fn=lr_fn,
+      num_microbatches=2, compress_bits=None, reduce_policy="exact2",
+      microbatch_reduce="exact2"))
+p3, o3, r3, m3 = s3(params, opt, res, batch)
+p3b, *_ = s3(params, opt, res, batch)
+det3 = all(np.array_equal(a, b) for a, b in zip(jax.tree.leaves(p3), jax.tree.leaves(p3b)))
+num3 = sum(float(jnp.sum((a.astype(jnp.float32)-b.astype(jnp.float32))**2))
+           for a, b in zip(jax.tree.leaves(p3), jax.tree.leaves(p2)))
 # compressed step must track the exact step closely (8-bit + EF)
 num = sum(float(jnp.sum((a.astype(jnp.float32)-b.astype(jnp.float32))**2))
           for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
@@ -116,6 +126,8 @@ den = sum(float(jnp.sum((a.astype(jnp.float32)-b.astype(jnp.float32))**2))
 print("DET", det)
 print("RELERR", num / max(den, 1e-30))
 print("LOSS", float(m1["loss"]), float(m2["loss"]))
+print("DET3", det3)
+print("RELERR3", num3 / max(den, 1e-30))
 """
 
 
@@ -128,3 +140,5 @@ def test_shardmap_intac_step():
     out = dict(line.split(None, 1) for line in r.stdout.strip().splitlines())
     assert out["DET"] == "True"
     assert float(out["RELERR"].split()[0]) < 0.5
+    assert out["DET3"] == "True"
+    assert float(out["RELERR3"].split()[0]) < 0.5

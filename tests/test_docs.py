@@ -1,0 +1,63 @@
+"""Docs stay truthful: link/symbol resolution + doctest health.
+
+CI runs ``tools/check_docs.py`` and ``pytest --doctest-modules`` as
+explicit steps; these tests keep the same checks inside tier-1 so drift
+is caught on any plain ``pytest`` run too.
+"""
+
+import doctest
+import importlib
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+sys.path.insert(0, str(REPO / "tools"))
+import check_docs  # noqa: E402
+
+
+def test_doc_references_resolve():
+    errors = []
+    for f in check_docs.DOC_FILES:
+        errors.extend(check_docs.check_file(f))
+    assert not errors, "\n".join(errors)
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    readme = (REPO / "README.md").read_text()
+    for doc in ("docs/architecture.md", "docs/policies.md"):
+        assert (REPO / doc).exists(), doc
+        assert doc in readme, f"README does not link {doc}"
+
+
+def test_no_stale_shim_references_in_sources_or_docs():
+    """The PR-3-deleted shims must not be referenced as live API anywhere
+    in sources, docs, or examples (tests/CHANGES record history and are
+    exempt)."""
+    stale = ("segment_sum_blocked", "intac_sum_exact")
+    roots = [REPO / "src", REPO / "docs", REPO / "examples",
+             REPO / "benchmarks", REPO / "README.md"]
+    hits = []
+    for root in roots:
+        files = [root] if root.is_file() else \
+            [*root.rglob("*.py"), *root.rglob("*.md")]
+        for f in files:
+            text = f.read_text()
+            hits.extend(f"{f.relative_to(REPO)}: {s}"
+                        for s in stale if s in text)
+    assert not hits, hits
+
+
+def test_reduce_package_doctests_pass():
+    """Every public-surface example in src/repro/reduce/ executes as
+    written (the same modules CI runs --doctest-modules over)."""
+    failures, total = 0, 0
+    for mod_name in ("repro.reduce.api", "repro.reduce.policy",
+                     "repro.reduce.backends", "repro.reduce.collective",
+                     "repro.reduce.accumulator"):
+        mod = importlib.import_module(mod_name)
+        res = doctest.testmod(mod, verbose=False)
+        failures += res.failed
+        total += res.attempted
+    assert failures == 0
+    assert total >= 10          # the audit promised examples, keep them

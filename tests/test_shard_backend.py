@@ -1,0 +1,295 @@
+"""shard_map backend tests: the multi-device face of repro.reduce.
+
+The tentpole contract: the shard_map backend runs the identical block
+schedule, so the integer tiers (exact / exact2 / procrastinate) are
+bitwise identical to the single-device ``blocked`` schedule at any shard
+count, for uneven N, and under permutation of shards; the float tiers
+hold documented tolerance.  Multi-device cases run in a subprocess with
+8 simulated CPU devices (XLA_FLAGS must be set before jax initializes);
+everything else runs in-process on whatever devices exist.
+"""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import reduce as R
+
+REPO = Path(__file__).resolve().parent.parent
+POLICIES = ("fast", "compensated", "exact", "exact2", "procrastinate")
+INT_POLICIES = ("exact", "exact2", "procrastinate")
+
+
+def _data(n=700, d=8, s=5, seed=0):
+    rng = np.random.RandomState(seed)
+    return (jnp.asarray(rng.randn(n, d).astype(np.float32)),
+            jnp.asarray(rng.randint(0, s, n)))
+
+
+# ---------------------------------------------------------------------------
+# in-process: registry, plumbing, and the 1-shard degenerate case
+# ---------------------------------------------------------------------------
+
+
+def test_backend_registered_with_capabilities():
+    bk = R.get_backend("shard_map")
+    assert bk.distributed
+    assert all(bk.supports(R.get_policy(p)) for p in POLICIES)
+    # single-device backends reject the mesh plumbing
+    assert not R.get_backend("blocked").distributed
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_one_shard_is_bitwise_the_blocked_schedule(policy):
+    """With one shard the carry merge is an identity, so even the float
+    tiers must reproduce the blocked backend exactly."""
+    vals, ids = _data()
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("shards",))
+    a = R.reduce(vals, segment_ids=ids, num_segments=5, policy=policy,
+                 backend="shard_map", mesh=mesh, block_size=128)
+    b = R.reduce(vals, segment_ids=ids, num_segments=5, policy=policy,
+                 backend="blocked", block_size=128)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mean_and_sentinel_through_shard_map():
+    vals = jnp.asarray([2.0, 4.0, 100.0])
+    ids = jnp.asarray([0, 0, R.OUT_OF_RANGE_LABEL])
+    out = R.reduce(vals, segment_ids=ids, num_segments=1, op="mean",
+                   backend="shard_map")
+    assert float(out[0]) == 3.0
+
+
+def test_mesh_kwarg_validation():
+    with pytest.raises(ValueError, match="single-device"):
+        R.reduce(jnp.ones(4), backend="blocked", mesh=R.default_mesh())
+    with pytest.raises(ValueError, match="axis_names"):
+        R.reduce(jnp.ones(4), backend="shard_map", mesh=R.default_mesh(),
+                 axis_names=("nonexistent",))
+    # distributed intent stated via axis_names must never silently fall
+    # back to a single-device reduction under auto-selection
+    if len(jax.devices()) == 1:
+        with pytest.raises(ValueError, match="axis_names"):
+            R.reduce(jnp.ones(4), axis_names=("shards",))
+
+
+def test_ambient_mesh_detection():
+    assert R.ambient_mesh() is None
+    with R.default_mesh() as m:
+        amb = R.ambient_mesh()
+        assert amb is not None and tuple(amb.axis_names) == ("shards",)
+        del m
+    assert R.ambient_mesh() is None
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_policy_merge_is_the_schedule_split(policy):
+    """``merge(fold(blocks[:k]), fold(blocks[k:]))`` equals
+    ``fold(blocks)`` — bitwise for the integer tiers (their carries add
+    associatively), tolerance for the float tiers.  This is the local
+    statement of the combiner contract the shard_map backend relies on."""
+    pol = R.get_policy(policy)
+    vals, ids = _data(n=512, d=4, s=3, seed=2)
+    ids = R.mask_out_of_range(ids, 3)
+    domain, ctx = pol.prepare(vals, 512)
+    bk = R.get_backend("blocked")
+    full = bk.run(domain, ids, 3, policy=pol, block_size=64)
+    ca = bk.run(domain[:256], ids[:256], 3, policy=pol, block_size=64)
+    cb = bk.run(domain[256:], ids[256:], 3, policy=pol, block_size=64)
+    merged = pol.merge(ca, cb)
+    out_full = np.asarray(pol.finalize(full, ctx))
+    out_merged = np.asarray(pol.finalize(merged, ctx))
+    if policy in INT_POLICIES:
+        assert np.array_equal(out_full, out_merged)
+    else:
+        np.testing.assert_allclose(out_merged, out_full, rtol=1e-6,
+                                   atol=1e-6)
+    assert pol.merge_is_add == (policy != "compensated")
+
+
+def test_merge_across_accumulator_single_device():
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("shards",))
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    acc = R.KahanAccumulator()
+    x = jnp.asarray([1.5, 2.5])
+
+    def f(v):
+        st = acc.push(acc.init(v), v)
+        return acc.finalize(R.merge_across(acc, st, mesh.axis_names))
+
+    out = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                    check_rep=False)(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x))
+
+
+def test_train_step_grad_reduce_routes_through_front_door():
+    """``make_train_step(..., grad_reduce="exact2")`` reduces the stacked
+    microbatch gradients through repro.reduce: the step must be
+    call-to-call deterministic and track the pairing-tree step closely."""
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.optim import adamw
+    from repro.train.steps import make_train_step
+
+    cfg = get_smoke_config("stablelm-1.6b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params)
+    lr_fn = adamw.cosine_schedule(1e-3, 2, 20)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32),
+                                          0, cfg.vocab)}
+    kw = dict(lr_fn=lr_fn, remat=False, moe_impl="dense",
+              num_microbatches=2)
+    s_tree = jax.jit(make_train_step(cfg, **kw))
+    s_exact = jax.jit(make_train_step(cfg, grad_reduce="exact2", **kw))
+    p1, _, m1 = s_tree(params, opt, batch)
+    p2, _, m2 = s_exact(params, opt, batch)
+    p2b, _, _ = s_exact(params, opt, batch)
+    assert all(np.array_equal(a, b) for a, b in
+               zip(jax.tree.leaves(p2), jax.tree.leaves(p2b)))
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    num = sum(float(jnp.sum((a - b) ** 2)) for a, b in
+              zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    den = sum(float(jnp.sum((a - b) ** 2)) for a, b in
+              zip(jax.tree.leaves(params), jax.tree.leaves(p1)))
+    assert num / max(den, 1e-30) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# multi-device: 1/2/8 simulated devices in a subprocess
+# ---------------------------------------------------------------------------
+
+MULTIDEV_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro import reduce as R
+
+rng = np.random.RandomState(0)
+n, d, s, bs = 1000, 16, 7, 128            # uneven: 1000 % (8*128) != 0
+vals = jnp.asarray(rng.randn(n, d).astype(np.float32))
+ids = jnp.asarray(rng.randint(0, s, n))
+
+for pol in ("fast", "compensated", "exact", "exact2", "procrastinate"):
+    base = np.asarray(R.reduce(vals, segment_ids=ids, num_segments=s,
+                               policy=pol, backend="blocked",
+                               block_size=bs))
+    scale = float(np.abs(base).max())
+    for ndev in (1, 2, 8):
+        mesh = Mesh(np.asarray(jax.devices()[:ndev]), ("shards",))
+        out = np.asarray(R.reduce(vals, segment_ids=ids, num_segments=s,
+                                  policy=pol, backend="shard_map",
+                                  mesh=mesh, block_size=bs))
+        bit = int(np.array_equal(base, out))
+        rel = float(np.abs(base - out).max()) / scale
+        print(f"GRID {pol} {ndev} {bit} {rel:.3e}")
+
+# BinAccumulator declares merge_is_add: merge_across must take the psum
+# fast path and still match a single-device pass bit for bit
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+meshA = Mesh(np.asarray(jax.devices()), ("data",))
+xa = jnp.asarray((np.arange(8 * 4).reshape(8, 4) % 7 - 3) * 0.25,
+                 dtype=jnp.float32)
+acc = R.BinAccumulator(8.0)
+def accf(shard):
+    st = acc.push(acc.init(shard[0]), shard[0])
+    return acc.finalize(R.merge_across(acc, st, ("data",)))
+got = np.asarray(shard_map(accf, mesh=meshA, in_specs=P("data", None),
+                           out_specs=P(), check_rep=False)(xa))
+direct = acc.init(xa[0])
+for row in xa:
+    direct = acc.push(direct, row)
+print(f"BINACC {int(np.array_equal(got, np.asarray(acc.finalize(direct))))}")
+
+# permutation of shards: swap whole shard-sized row chunks; the integer
+# tiers must not notice (associative + commutative integer carries)
+mesh8 = Mesh(np.asarray(jax.devices()), ("shards",))
+npad = 1024                                # 8 shards x 1 block of 128
+vp = jnp.asarray(rng.randn(npad, d).astype(np.float32))
+ip = jnp.asarray(rng.randint(0, s, npad))
+perm = rng.permutation(8)
+chunks = np.arange(npad).reshape(8, -1)[perm].reshape(-1)
+for pol in ("exact", "exact2", "procrastinate"):
+    a = np.asarray(R.reduce(vp, segment_ids=ip, num_segments=s,
+                            policy=pol, backend="shard_map", mesh=mesh8,
+                            block_size=bs))
+    b = np.asarray(R.reduce(vp[chunks], segment_ids=ip[chunks],
+                            num_segments=s, policy=pol,
+                            backend="shard_map", mesh=mesh8,
+                            block_size=bs))
+    print(f"PERM {pol} {int(np.array_equal(a, b))}")
+
+# auto-selection under an ambient multi-device mesh, bitwise vs blocked
+with mesh8:
+    auto = np.asarray(R.reduce(vals, segment_ids=ids, num_segments=s,
+                               policy="exact2", block_size=bs))
+base = np.asarray(R.reduce(vals, segment_ids=ids, num_segments=s,
+                           policy="exact2", backend="blocked",
+                           block_size=bs))
+print(f"AUTO {int(np.array_equal(auto, base))}")
+
+# a 2D mesh, sharding over both axes jointly
+mesh2d = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("dp", "mp"))
+out2d = np.asarray(R.reduce(vals, segment_ids=ids, num_segments=s,
+                            policy="procrastinate", backend="shard_map",
+                            mesh=mesh2d, block_size=bs))
+base2d = np.asarray(R.reduce(vals, segment_ids=ids, num_segments=s,
+                             policy="procrastinate", backend="blocked",
+                             block_size=bs))
+print(f"MESH2D {int(np.array_equal(out2d, base2d))}")
+
+# the training route: make_train_step(grad_reduce="exact2",
+# grad_reduce_mesh=<8-dev mesh>) routes the microbatch-gradient mean
+# through shard_map and must reproduce the local-executor build bit for
+# bit (the integer tiers' executor-invariance, through a whole step)
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.optim import adamw
+from repro.train.steps import make_train_step
+cfg = get_smoke_config("stablelm-1.6b")
+params = init_params(jax.random.PRNGKey(0), cfg)
+opt = adamw.init(params)
+kw = dict(lr_fn=adamw.cosine_schedule(1e-3, 2, 20), remat=False,
+          moe_impl="dense", num_microbatches=2, grad_reduce="exact2")
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32),
+                                      0, cfg.vocab)}
+p1, _, _ = jax.jit(make_train_step(cfg, grad_reduce_mesh=mesh8,
+                                   **kw))(params, opt, batch)
+p0, _, _ = jax.jit(make_train_step(cfg, **kw))(params, opt, batch)
+same = all(np.array_equal(a, b)
+           for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p0)))
+print(f"TRAINSTEP {int(same)}")
+"""
+
+
+def test_multidevice_bitwise_invariance():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    r = subprocess.run([sys.executable, "-c", MULTIDEV_SNIPPET],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    lines = [ln.split() for ln in r.stdout.strip().splitlines()]
+    grid = {(p, int(nd)): (int(bit), float(rel))
+            for _, p, nd, bit, rel in
+            (ln for ln in lines if ln[0] == "GRID")}
+    assert len(grid) == 15
+    for (pol, ndev), (bit, rel) in grid.items():
+        if pol in INT_POLICIES or ndev == 1:
+            assert bit == 1, (pol, ndev)        # bitwise, any shard count
+        else:
+            assert rel < 1e-5, (pol, ndev, rel)   # documented tolerance
+    perms = {p: int(bit) for tag, p, bit in
+             (ln for ln in lines if ln[0] == "PERM")}
+    assert perms == {p: 1 for p in INT_POLICIES}
+    tags = [(ln[0], ln[1]) for ln in lines]
+    assert ("AUTO", "1") in tags
+    assert ("MESH2D", "1") in tags
+    assert ("TRAINSTEP", "1") in tags
+    assert ("BINACC", "1") in tags

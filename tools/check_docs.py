@@ -1,0 +1,125 @@
+"""Doc drift check: README/docs references to files and symbols must
+resolve.
+
+Scans README.md and docs/*.md for
+
+  * markdown links to local files/anchors — the target must exist;
+  * backticked path-like references (``src/repro/reduce/api.py``,
+    ``examples/multi_device_reduce.py``, ``repro/reduce/policy.py`` —
+    with or without the ``src/`` prefix, files or directories);
+  * backticked dotted symbols rooted at the package
+    (``repro.reduce.collective_mean``,
+    ``benchmarks.run``) — the import + attribute chain must resolve;
+  * ``path.py::symbol`` pytest-style references — file and attribute
+    both checked.
+
+Exits non-zero listing every dangling reference, so CI fails on drift
+(e.g. a doc still naming a deleted shim like ``segment_sum_blocked``).
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# `python tools/check_docs.py` puts tools/ on sys.path, not the repo root:
+# make the documented `repro.*` / `benchmarks.*` symbol resolution work
+# regardless of how we were invoked.
+for _p in (str(REPO), str(REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+#: files whose references we hold to the resolve-or-fail bar
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+_BACKTICK = re.compile(r"`([^`\n]+)`")
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_PATHLIKE = re.compile(r"^[\w./-]+(?:\.(?:py|md|txt|yml|toml)|/)$")
+_DOTTED = re.compile(r"^(repro|benchmarks)(\.\w+)+$")
+_PYTEST_REF = re.compile(r"^([\w./-]+\.py)::(\w+)$")
+
+
+def _resolve_path(ref: str):
+    """The on-disk Path for a doc reference (repo root or src/), or None."""
+    ref = ref.rstrip("/")
+    for base in (REPO, REPO / "src"):
+        if (base / ref).exists():
+            return base / ref
+    return None
+
+
+def _path_resolves(ref: str) -> bool:
+    return _resolve_path(ref) is not None
+
+
+def _symbol_resolves(ref: str) -> bool:
+    parts = ref.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def check_file(path: Path) -> list:
+    text = path.read_text()
+    errors = []
+
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1)
+        if "://" in target:                     # external URL: out of scope
+            continue
+        target = target.split("#")[0]
+        if target and not (path.parent / target).exists() \
+                and not _path_resolves(target):
+            errors.append(f"{path.name}: dangling link target {target!r}")
+
+    for m in _BACKTICK.finditer(text):
+        ref = m.group(1).strip()
+        pytest_ref = _PYTEST_REF.match(ref)
+        if pytest_ref:
+            fpath, sym = pytest_ref.groups()
+            resolved = _resolve_path(fpath)
+            if resolved is None:
+                errors.append(f"{path.name}: dangling path {fpath!r}")
+            elif not re.search(rf"def {sym}\b|class {sym}\b",
+                               resolved.read_text()):
+                errors.append(f"{path.name}: {fpath!r} has no {sym!r}")
+        elif _PATHLIKE.match(ref) and "/" in ref:
+            if not _path_resolves(ref):
+                errors.append(f"{path.name}: dangling path {ref!r}")
+        elif _DOTTED.match(ref):
+            if not _symbol_resolves(ref):
+                errors.append(f"{path.name}: unresolvable symbol {ref!r}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for f in DOC_FILES:
+        errors.extend(check_file(f))
+    if errors:
+        print(f"doc check: {len(errors)} dangling reference(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"doc check: {len(DOC_FILES)} files clean "
+          f"({', '.join(f.name for f in DOC_FILES)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
