@@ -175,6 +175,16 @@ def table6_reduce_policies(rows, *, smoke: bool = False):
         rows.append((f"table6_reduce_{pol}_us", us,
                      f"max_abs_err_vs_f64={err:.3e} "
                      f"({n}x{d} rows, {s} segments, blocked backend)"))
+        # machine-independent accuracy rows, for the integer tiers only:
+        # their error is bit-deterministic by the repo's own contract, so
+        # the baseline gate can hold it to 20% exactly.  The float tiers'
+        # error depends on XLA's internal f32 dot reduction order — it
+        # would move with a jax upgrade, so it stays informational (in
+        # the derived column above).
+        if pol in ("exact", "exact2", "procrastinate"):
+            rows.append((f"table6_reduce_{pol}_err", err,
+                         f"max_abs_err_vs_f64, deterministic fixture "
+                         f"({n}x{d} rows, {s} segments)"))
 
 
 def table6b_large_n_resolution(rows, *, smoke: bool = False):
@@ -189,13 +199,14 @@ def table6b_large_n_resolution(rows, *, smoke: bool = False):
     for n in sizes:
         x = rng.randn(n).astype(np.float32)
         ref = float(np.sum(x.astype(np.float64)))
+        ulp = float(np.spacing(np.abs(np.float32(ref)), dtype=np.float32))
         xj = jnp.asarray(x)
-        errs = []
         for pol in ("exact", "exact2", "procrastinate"):
             out = float(repro.reduce(xj, policy=pol, backend="blocked"))
-            errs.append(f"{pol}={abs(out - ref):.3e}")
-        rows.append((f"table6b_resolution_n{n}", n,
-                     "abs_err_vs_f64: " + " ".join(errs)))
+            err = abs(out - ref)
+            rows.append((f"table6b_resolution_n{n}_{pol}", err,
+                         f"abs_err_vs_f64 ({err / ulp:.2f} ulp of the "
+                         f"sum; standard-normal stream)"))
 
 
 def table7_shard_scaling(rows, *, smoke: bool = False):
@@ -205,12 +216,17 @@ def table7_shard_scaling(rows, *, smoke: bool = False):
     devices (CPU: simulate a fleet with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), times each
     shard count against the single-device ``blocked`` schedule, and
-    asserts the tentpole invariant inline: the integer tiers' results are
-    bitwise identical at every shard count.  Host wall-clock on simulated
-    CPU devices measures dispatch overhead, not speedup — the column to
-    read is ``bitwise`` (and, on real fleets, the trend).
+    asserts the invariants inline: ``procrastinate`` results (and
+    ``exact2``'s canonical integer limbs) are bitwise identical at every
+    shard count; ``exact2``'s finalized float — which folds its residual
+    limb in device order — holds ulp-level tolerance.  Host wall-clock on
+    simulated CPU devices measures dispatch overhead, not speedup — the
+    column to read is ``bitwise`` (and, on real fleets, the trend).
     """
     from jax.sharding import Mesh
+
+    from repro.core import intac
+    from repro.reduce import get_backend, get_policy, mask_out_of_range
 
     devs = jax.devices()
     n, d, s = (1 << 12, 16, 8) if smoke else (1 << 16, 64, 32)
@@ -233,9 +249,32 @@ def table7_shard_scaling(rows, *, smoke: bool = False):
                 backend="shard_map", mesh=m))
             out = np.asarray(fn(vals, ids))
             bitwise = bool(np.array_equal(base, out))
-            if pol != "fast":
+            if pol == "procrastinate":
                 assert bitwise, (pol, c)      # the tentpole invariant
+            elif pol == "exact2":
+                # split guarantee: finalized float to ulp-level tolerance
+                # (the residual limb folds in device order) ...
+                rel = float(np.abs(base - out).max()) / \
+                    max(float(np.abs(base).max()), 1e-30)
+                assert rel < 1e-6, (c, rel)
             us = _time(fn, vals, ids)
             rows.append((f"table7_{pol}_shard{c}_us", us,
                          f"bitwise_vs_blocked={bitwise} "
                          f"speedup_vs_1dev={us0 / us:.2f}x"))
+
+    # ... and exact2's canonical int32 limbs bitwise at every shard count
+    pol2 = get_policy("exact2")
+    mids = mask_out_of_range(ids, s)
+    domain, _ = pol2.prepare(jnp.where((mids >= 0)[:, None], vals, 0.0), n)
+    cb = get_backend("blocked").run(domain, mids, s, policy=pol2)
+    lb = [np.asarray(v) for v in intac.limbs_canonical(cb[0], cb[1])]
+    for c in counts:
+        mesh = Mesh(np.asarray(devs[:c]), ("shards",))
+        csh = get_backend("shard_map").run(domain, mids, s, policy=pol2,
+                                           mesh=mesh)
+        lsh = intac.limbs_canonical(csh[0], csh[1])
+        assert all(np.array_equal(a, np.asarray(b))
+                   for a, b in zip(lb, lsh)), c
+    rows.append(("table7_exact2_limbs_bitwise", 1.0,
+                 f"canonical hi/lo limbs == blocked at shard counts "
+                 f"{counts}"))

@@ -12,14 +12,81 @@ are visible; on CPU simulate a fleet first:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m benchmarks.run --smoke
+
+Regression tracking (the ROADMAP "tracked regression table"): the smoke
+numbers are pinned in ``benchmarks/baseline.json``.  CI runs
+
+    ... python -m benchmarks.run --smoke --check-baseline
+
+and fails on a >20% regression in any machine-independent row (schedule
+cycle counts, the ``*_err`` accuracy rows, invariant flags — these are
+bit-deterministic, so 20% is pure slack).  Wall-clock ``*_us`` rows are
+first normalized by the host-speed factor (the median current/baseline
+ratio across all ``*_us`` rows) and then held to a deliberately wide
+noise band (``TIME_NOISE_FACTOR``): at smoke sizes, sharded dispatch on
+simulated CPU devices jitters several-fold run to run, so the time gate
+catches order-of-magnitude hot-path regressions, not 20% ones.  After an
+intentional change, refresh the file with ``--write-baseline`` and
+commit it.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import statistics
+import sys
 from pathlib import Path
 
 from benchmarks import paper_tables
+
+BASELINE_PATH = Path(__file__).resolve().parent / "baseline.json"
+#: fail threshold for machine-independent rows: >20% worse than baseline
+REGRESSION_FACTOR = 1.2
+#: absolute slack for near-zero deterministic rows (exact-tier errors)
+REGRESSION_ATOL = 1e-12
+#: wall-clock noise band (after host-speed normalization): smoke-size
+#: timings on simulated devices jitter several-fold, so the time gate is
+#: an order-of-magnitude tripwire, not a 20% one
+TIME_NOISE_FACTOR = 4.0
+
+
+def check_baseline(rows, baseline: dict) -> list:
+    """Compare ``rows`` against a baseline mapping; return failure strings.
+
+    ``*_us`` rows are host-speed-normalized before the 20% gate; every
+    other row (cycle counts, ``*_err`` accuracy rows, invariant flags) is
+    machine-independent and gated directly.  Rows missing on either side
+    are reported as failures too — the baseline must be refreshed
+    (``--write-baseline``) in the same change that renames a benchmark.
+    """
+    current = {name: val for name, val, _ in rows}
+    failures = [f"row {name!r} missing from baseline; refresh with "
+                f"--write-baseline" for name in current
+                if name not in baseline]
+    failures += [f"baseline row {name!r} no longer produced; refresh "
+                 f"with --write-baseline" for name in baseline
+                 if name not in current]
+
+    shared = [n for n in current if n in baseline]
+    time_rows = [n for n in shared if n.endswith("_us")]
+    ratios = [current[n] / baseline[n] for n in time_rows
+              if baseline[n] > 0]
+    speed = statistics.median(ratios) if ratios else 1.0
+
+    for name in shared:
+        cur, base = current[name], baseline[name]
+        if name.endswith("_us"):
+            limit = base * speed * TIME_NOISE_FACTOR
+            if cur > limit:
+                failures.append(
+                    f"{name}: {cur:.1f}us > {limit:.1f}us "
+                    f"(baseline {base:.1f}us x host-speed {speed:.2f} "
+                    f"x {TIME_NOISE_FACTOR})")
+        elif cur > base * REGRESSION_FACTOR + REGRESSION_ATOL:
+            failures.append(f"{name}: {cur:.6g} > {base:.6g} "
+                            f"x {REGRESSION_FACTOR}")
+    return failures
 
 
 def main(argv=None) -> None:
@@ -30,7 +97,16 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI subset: the schedule table and the "
                          "full five-policy sweep at reduced sizes")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the smoke numbers to benchmarks/"
+                         "baseline.json (commit it)")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail (exit 1) on a >20% regression vs the "
+                         "tracked benchmarks/baseline.json")
     args = ap.parse_args(argv)
+    if (args.write_baseline or args.check_baseline) and not args.smoke:
+        ap.error("--write-baseline/--check-baseline track the --smoke "
+                 "subset; pass --smoke too")
 
     rows = []
     if args.smoke:
@@ -50,6 +126,27 @@ def main(argv=None) -> None:
     print("name,value,derived")
     for name, val, derived in rows:
         print(f"{name},{val:.6g},{derived}")
+
+    if args.write_baseline:
+        BASELINE_PATH.write_text(json.dumps(
+            {name: val for name, val, _ in rows}, indent=2,
+            sort_keys=True) + "\n")
+        print(f"baseline: wrote {len(rows)} rows to {BASELINE_PATH}")
+    if args.check_baseline:
+        if not BASELINE_PATH.exists():
+            print(f"baseline: {BASELINE_PATH} missing; run with "
+                  f"--write-baseline and commit it")
+            sys.exit(1)
+        baseline = json.loads(BASELINE_PATH.read_text())
+        failures = check_baseline(rows, baseline)
+        if failures:
+            print(f"baseline: {len(failures)} regression(s) vs "
+                  f"{BASELINE_PATH.name}:")
+            for f in failures:
+                print(f"  {f}")
+            sys.exit(1)
+        print(f"baseline: {len(baseline)} rows within "
+              f"{REGRESSION_FACTOR}x of {BASELINE_PATH.name}")
 
     if args.with_roofline and Path("experiments/dryrun").exists():
         from benchmarks import roofline

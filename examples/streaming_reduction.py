@@ -77,7 +77,8 @@ def main():
     s1 = float(jnp.sum(x))
     print(f"  jnp.sum for reference: {s1} (order-dependent in general);")
     print("  note exact's 1/N scale visibly drifts at N=1e5 — exact2 and")
-    print("  procrastinate hold full f32 resolution at any length")
+    print("  procrastinate hold <=1 ulp at any length (exact2's residual")
+    print("  limb re-folds under reversal: ulp tolerance, bitwise limbs)")
 
 
 if __name__ == "__main__":

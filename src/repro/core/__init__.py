@@ -23,8 +23,10 @@ from . import circuit, circuit_jax, intac, juggler, segmented, trees  # noqa: F4
 from .circuit import INTAC, JugglePAC, jugglepac_min_set_size  # noqa: F401
 from .intac import (bin_psum, compressed_psum_mean,  # noqa: F401
                     compressed_psum_mean_tree, intac_psum, intac_psum2,
-                    intac_sum, limb_add, limb_finalize, limb_init,
-                    limb_merge)
+                    intac_psum3, intac_sum, limb3_finalize, limb3_init,
+                    limb3_merge_across, limb_add, limb_add3, limb_finalize,
+                    limb_init, limb_merge, limb_merge3, limb_split3,
+                    limbs_canonical, limbs_resolve3)
 from .juggler import (juggler_finalize, juggler_init,  # noqa: F401
                       juggler_push, num_slots_for)
 from .segmented import (combine_flash_partials_tree, flash_partial_combine,  # noqa: F401

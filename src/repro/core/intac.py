@@ -18,13 +18,20 @@ the TPU answer to the paper's FP non-associativity problem, and the basis of:
   * ``LimbAccumulator``     — two-limb int32 carry-save accumulator (wider
                               dynamic range, deferred carries; the closest
                               software analogue of (sum, carry) feedback);
+  * ``limb_split3`` et al.  — the three-limb path: the exactly-captured
+                              quantization residual rides along as a
+                              compensated f32 limb, so "exact" holds for
+                              arbitrary f32 inputs, not just values on the
+                              scale's dyadic grid;
   * ``bin_split/combine``   — exponent-indexed "procrastination" bins
                               (Liguori/Neal): per-element exact digit
                               split, all rounding deferred to one combine;
   * ``intac_psum``          — deterministic cross-device reduction (plus
-                              ``intac_psum2`` / ``bin_psum``, the two-limb
-                              and per-bin variants whose resolution does
-                              not shrink with the device count);
+                              ``intac_psum2`` / ``intac_psum3`` /
+                              ``bin_psum``, the two-limb, residual-carrying
+                              three-limb, and per-bin variants whose
+                              resolution does not shrink with the device
+                              count);
   * ``CompressedAllReduce`` — int8/int16-quantized gradient all-reduce with
                               error feedback (the distributed-optimization
                               use of the same primitive).
@@ -82,9 +89,16 @@ def choose_scale(max_abs: jnp.ndarray, num_terms: int,
     # their scale so coarse that every value quantized to 0.  Floor at the
     # smallest normal (values below it are flushed by the hardware anyway)
     # and clamp e to the f32 exponent range so the scale stays finite.
-    max_abs = jnp.maximum(max_abs, jnp.float32(2.0 ** -126))
+    max_abs = jnp.asarray(max_abs, jnp.float32)
+    floored = jnp.maximum(max_abs, jnp.float32(2.0 ** -126))
     e = jnp.floor(jnp.float32(qbits) - jnp.log2(jnp.float32(num_terms))
-                  - jnp.log2(max_abs)).astype(jnp.int32)
+                  - jnp.log2(floored)).astype(jnp.int32)
+    # An all-zero (or all-padding) stream has max_abs == 0 — there is
+    # nothing to represent, so any scale is "correct", but the clamped
+    # near-2^127 scale the floor would produce is a footgun for any later
+    # nonzero use (instant overflow) and NaN statistics would poison e
+    # outright.  Pin the degenerate case to the benign unit scale.
+    e = jnp.where(max_abs > 0, e, jnp.int32(0))
     # ldexp(1, e) is an exact power of two; exp2(float) is approximated on
     # some backends (observed 2^26 + 64 on XLA CPU) which breaks exactness.
     return jnp.ldexp(jnp.float32(1.0), jnp.clip(e, -126, 127))
@@ -167,6 +181,21 @@ def limb_split(q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return hi, lo
 
 
+def limbs_canonical(hi: jnp.ndarray,
+                    lo: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Canonicalize an (hi, lo) int32 limb pair in the integer domain.
+
+    lo's bits above ``LIMB_SHIFT`` carry into hi, leaving the unique
+    Euclidean pair with lo in [0, 2^LIMB_SHIFT).  The canonical pair is a
+    pure function of the represented integer total ``hi * 2^15 + lo`` —
+    *this* is the bitwise-invariant object of the limb tiers: raw carries
+    depend on how the stream was blocked, the canonical pair does not.
+    Tests and the shard_map guarantee compare limbs through here.
+    """
+    carry = jnp.right_shift(lo, LIMB_SHIFT)
+    return hi + carry, jnp.bitwise_and(lo, (1 << LIMB_SHIFT) - 1)
+
+
 def limb_add(state: LimbState, x: jnp.ndarray) -> LimbState:
     """Accumulate one fp32 operand (the 3:2 compressor step).
 
@@ -189,9 +218,7 @@ def limbs_resolve(hi: jnp.ndarray, lo: jnp.ndarray, scale) -> jnp.ndarray:
     rounding in the whole accumulation happens here.  ``lo`` must be
     non-negative (it is a sum of per-step remainders in [0, 2^15)).
     """
-    carry = jnp.right_shift(lo, LIMB_SHIFT)
-    hi = hi + carry
-    lo = jnp.bitwise_and(lo, (1 << LIMB_SHIFT) - 1)
+    hi, lo = limbs_canonical(hi, lo)
     total = jnp.ldexp(hi.astype(jnp.float32), LIMB_SHIFT) \
         + lo.astype(jnp.float32)
     return descale(total, scale)
@@ -204,6 +231,116 @@ def limb_finalize(state: LimbState) -> jnp.ndarray:
 def limb_merge(a: LimbState, b: LimbState) -> LimbState:
     """Merging two redundant accumulators is itself exact/associative."""
     return LimbState(a.hi + b.hi, a.lo + b.lo, a.scale)
+
+
+# ---------------------------------------------------------------------------
+# Three-limb carry-save: the residual limb
+# ---------------------------------------------------------------------------
+#
+# The two-limb path quantizes each value to the shared power-of-two grid
+# and *discards* what the rounding dropped — exact only for inputs already
+# on the grid.  The third limb keeps that drop: because the scale is a
+# power of two, ``r = x - descale(quantize(x, scale), scale)`` is computed
+# *exactly* in f32 (the classic Dekker-split argument: q/scale is x
+# rounded to a coarser grid, the difference is a short-mantissa number and
+# the subtraction is exact by Sterbenz), so (hi, lo, r) represents x with
+# no information loss at all.  The integer limbs keep their associative /
+# bitwise-order-independent contract; the residual limb accumulates
+# compensated-style (a two_sum-carried f32 pair), which pins its error at
+# the ~f64 level — tolerance, not bits, under re-ordering.  ``finalize``
+# is one carry-resolve + compensated combine, within 1 ulp of the f64
+# reference for arbitrary f32 streams.
+
+
+class Limb3State(NamedTuple):
+    """Three-limb redundant accumulator: (hi, lo) int32 carry-save limbs
+    plus the compensated f32 residual pair (res, comp).
+
+    value represented = (hi * 2^15 + lo) / scale + res + comp.
+    """
+    hi: jnp.ndarray    # int32
+    lo: jnp.ndarray    # int32
+    res: jnp.ndarray   # f32: exactly-captured quantization residuals
+    comp: jnp.ndarray  # f32: two_sum compensation of the residual limb
+    scale: jnp.ndarray
+
+
+def limb3_init(shape, scale) -> Limb3State:
+    z = jnp.zeros(shape, jnp.int32)
+    r = jnp.zeros(shape, jnp.float32)
+    return Limb3State(z, z, r, r, jnp.asarray(scale, jnp.float32))
+
+
+def limb_split3(x: jnp.ndarray, scale) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                jnp.ndarray]:
+    """Split one f32 operand into (hi, lo, residual) — lossless.
+
+    hi/lo are the integer limbs of ``quantize(x, scale)`` (pure shift/
+    mask, see ``limb_split``); the residual is what quantization rounded
+    away, computed exactly: scale is a power of two, so ``x * scale`` is
+    exact, ``q / scale`` is x rounded to the grid, and the subtraction of
+    two so-close values is exact (Sterbenz / Dekker).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    q = quantize(x, scale)
+    hi, lo = limb_split(q)
+    return hi, lo, x - dequantize(q, scale)
+
+
+def limb_add3(state: Limb3State, x: jnp.ndarray) -> Limb3State:
+    """Accumulate one fp32 operand losslessly (3:2 compressor + residual).
+
+    Integer limbs add associatively; the residual folds through ``two_sum``
+    so its rounding error is carried, not dropped.
+    """
+    hi, lo, r = limb_split3(x, state.scale)
+    s, e = two_sum(state.res, r)
+    return Limb3State(state.hi + hi, state.lo + lo, s, state.comp + e,
+                      state.scale)
+
+
+def limb_merge3(a: Limb3State, b: Limb3State) -> Limb3State:
+    """Merge two three-limb accumulators: integer limbs add exactly (any
+    order, same bits); the residual pair merges through ``two_sum`` —
+    deterministic for a pinned merge order, ulp-level drift otherwise."""
+    s, e = two_sum(a.res, b.res)
+    return Limb3State(a.hi + b.hi, a.lo + b.lo, s, a.comp + b.comp + e,
+                      a.scale)
+
+
+def limbs_resolve3(hi: jnp.ndarray, lo: jnp.ndarray, res: jnp.ndarray,
+                   scale, comp: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Carry-resolve the integer limbs, fold the residual limb back in,
+    descale — the three-limb once-per-set final addition.
+
+    The integer canonicalization (as in ``limbs_resolve``) makes the
+    (hi, lo) pair a pure function of the accumulated integer total, so
+    that part of the result is bitwise independent of blocking/ordering.
+    The integer total is then *exactly* decomposed into f32-representable
+    pieces (hi alone can exceed the 24-bit mantissa, so hi splits once
+    more) and combined with the residual pair least-significant-first
+    through compensated two_sums — the one rounding the caller sees is
+    the final one, keeping the result within 1 ulp of the f64 reference.
+    """
+    hi, lo = limbs_canonical(hi, lo)
+    # hi may need up to 31 bits: split into two exactly-convertible pieces
+    _HSPLIT = 14
+    hih = jnp.right_shift(hi, _HSPLIT)               # |hih| <= 2^17
+    hil = jnp.bitwise_and(hi, (1 << _HSPLIT) - 1)    # in [0, 2^14)
+    acc = res.astype(jnp.float32)
+    cmp_ = (jnp.zeros_like(acc) if comp is None
+            else comp.astype(jnp.float32))
+    for quanta, shift in ((lo, 0), (hil, LIMB_SHIFT),
+                          (hih, LIMB_SHIFT + _HSPLIT)):
+        term = descale(_ldexp2(quanta.astype(jnp.float32), shift), scale)
+        acc, e = two_sum(acc, term)
+        cmp_ = cmp_ + e
+    return acc + cmp_
+
+
+def limb3_finalize(state: Limb3State) -> jnp.ndarray:
+    return limbs_resolve3(state.hi, state.lo, state.res, state.scale,
+                          comp=state.comp)
 
 
 # ---------------------------------------------------------------------------
@@ -333,6 +470,53 @@ def intac_psum2(x: jnp.ndarray, axis_name, *, qbits: int = 30) -> jnp.ndarray:
     hi, lo = limb_split(quantize(x, scale))
     return limbs_resolve(jax.lax.psum(hi, axis_name),
                          jax.lax.psum(lo, axis_name), scale)
+
+
+def limb3_merge_across(hi: jnp.ndarray, lo: jnp.ndarray, res: jnp.ndarray,
+                       comp: jnp.ndarray, axis_names) -> Tuple[
+                           jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                           jnp.ndarray]:
+    """The one cross-device merge of three-limb state (inside shard_map).
+
+    Integer limbs reduce with one associative int32 ``psum`` each — any
+    reduction topology, same bits, at any device count.  The residual
+    pair all-gathers and folds strictly in device order through
+    ``two_sum`` with pooled compensation, so the combine schedule is a
+    pure function of the mesh — deterministic, ulp-level tolerance
+    rather than bits.  Every layer that merges three-limb state across
+    devices (the exact2 policy, ``Limb3Accumulator``, ``intac_psum3``)
+    delegates here so the semantics cannot drift apart.
+    """
+    axes = tuple(axis_names)
+    hi = jax.lax.psum(hi, axes)
+    lo = jax.lax.psum(lo, axes)
+    gr = jax.lax.all_gather(res, axes, axis=0)
+    gc = jax.lax.all_gather(comp, axes, axis=0)
+    res, comp = gr[0], gc[0]
+    for k in range(1, gr.shape[0]):
+        res, e = two_sum(res, gr[k])
+        comp = comp + gc[k] + e
+    return hi, lo, res, comp
+
+
+def intac_psum3(x: jnp.ndarray, axis_name, *, qbits: int = 30) -> jnp.ndarray:
+    """Three-limb exact cross-device sum: two-limb resolution *plus* the
+    exactly-captured quantization residual.
+
+    The integer limbs follow ``intac_psum2`` bit for bit (one associative
+    int32 psum per limb — any reduction topology, same bits); the residual
+    limb all-gathers and folds strictly in device order through ``two_sum``
+    (``limb3_merge_across``), so the combine schedule is a pure function
+    of the mesh.  The finalized sum is within 1 ulp of the f64 reference
+    for arbitrary f32 inputs — the residual makes "exact" hold off the
+    dyadic grid too.
+    """
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = choose_scale(gmax, 1, qbits)
+    hi, lo, res = limb_split3(x, scale)
+    hi, lo, res, comp = limb3_merge_across(hi, lo, res, jnp.zeros_like(res),
+                                           axis_name)
+    return limbs_resolve3(hi, lo, res, scale, comp=comp)
 
 
 def bin_psum(x: jnp.ndarray, axis_name) -> jnp.ndarray:

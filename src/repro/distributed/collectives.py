@@ -8,9 +8,10 @@ stream through the Accumulator protocol (or, with ``microbatch_reduce``,
 through a ``repro.reduce`` segment reduction under any accuracy policy),
 and the cross-device mean is a ``repro.reduce.collective_mean`` policy —
 ``fast`` (plain hierarchical), ``compensated`` (INTAC compressed + error
-feedback), ``exact`` (full-width integer psum), ``exact2`` (two-limb
-psum), or ``procrastinate`` (per-bin psum).  The JugglePAC/INTAC
-distributed tricks:
+feedback), ``exact`` (full-width integer psum), ``exact2`` (three-limb
+psum: integer limbs + the exactly-captured quantization residual), or
+``procrastinate`` (per-bin psum).  The JugglePAC/INTAC distributed
+tricks:
 
   1. **INTAC compressed all-reduce** — gradients are quantized to ``bits``-bit
      fixed point with a shared power-of-two scale, summed in the exact

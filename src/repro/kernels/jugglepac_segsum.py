@@ -14,11 +14,12 @@ The circuit's streaming schedule, mapped to the TPU grid:
   * in-order emission                   ->  row s of the output is segment s.
 
 There is exactly ONE kernel body for the block schedule:
-``_segsum_policy_kernel`` executes ``policy.update`` — the same pure jnp
-ops the ref/blocked backends thread — against the carry refs, so the
-cross-backend bitwise contract holds for every policy (fast / compensated
-f32 carries, exact single-limb, exact2 two-limb, procrastinate bins) by
-construction rather than by duplicated code.
+``_segsum_policy_kernel`` executes ``policy.contrib`` + ``policy.update``
+— the same pure jnp ops the ref/blocked backends thread — against the
+carry refs, so the cross-backend bitwise contract holds for every policy
+(fast / compensated f32 carries, exact single-limb, exact2 three-limb
+with its residual channel, procrastinate bins) by construction rather
+than by duplicated code.
 
 VMEM budget per step: B*D (values) + B (ids) + carry_len*S*D floats —
 the callers (ops.segment_sum, the reduce pallas backend) tile the label
@@ -39,10 +40,11 @@ def _segsum_policy_kernel(ids_ref, vals_ref, *out_refs, num_segments: int,
                           seg_offset: int, policy):
     """The streaming schedule with the accuracy-policy carry baked in.
 
-    ``policy.update`` is traced straight into the grid loop — the one
-    canonical op sequence per policy; the cross-backend bitwise contract
-    depends on this being the very function the blocked/ref backends
-    call.  Policies executed here must zero-init their carry.
+    ``policy.contrib`` and ``policy.update`` are traced straight into the
+    grid loop — the one canonical op sequence per policy; the
+    cross-backend bitwise contract depends on these being the very
+    functions the blocked/ref backends call.  Policies executed here must
+    zero-init their carry.
     """
     step = pl.program_id(0)
 
@@ -52,13 +54,13 @@ def _segsum_policy_kernel(ids_ref, vals_ref, *out_refs, num_segments: int,
             r[...] = jnp.zeros_like(r)
 
     ids = ids_ref[...]                              # (B, 1) int32
-    vals = vals_ref[...]                            # (B, D) domain dtype
+    vals = vals_ref[...]                            # (B, W) domain dtype
     labels = jax.lax.broadcasted_iota(
         jnp.int32, (1, num_segments), 1) + seg_offset
-    onehot = (ids == labels).astype(vals.dtype)     # (B, S)
-    # state-1 pairing of the whole tile at once, on the MXU:
-    contrib = jnp.dot(onehot.T, vals,
-                      preferred_element_type=policy.acc_dtype)
+    onehot = ids == labels                          # (B, S) bool
+    # state-1 pairing of the whole tile at once, on the MXU (the policy
+    # owns the dot(s): exact2 runs one int32 + one f32 dot per block):
+    contrib = policy.contrib(onehot, vals)
     carry = policy.update(tuple(r[...] for r in out_refs), contrib)
     for r, c in zip(out_refs, carry):
         r[...] = c
@@ -68,9 +70,10 @@ def segsum_policy_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
                          num_segments: int, *, policy,
                          block_rows: int = 512, seg_offset: int = 0,
                          interpret: bool = False):
-    """values (N, D) already in ``policy``'s domain dtype (f32 or int32 —
-    ``Policy.prepare`` already ran), ids (N,) int32 -> tuple of
-    ``policy.carry_len`` (num_segments, D) carry arrays, not finalized.
+    """values (N, W) already in ``policy``'s domain (``Policy.prepare``
+    already ran; W may exceed the raw feature width D — e.g. exact2's
+    quantized|residual halves), ids (N,) int32 -> tuple of
+    ``policy.carry_len`` carry arrays, not finalized.
 
     N must be a multiple of block_rows (the callers pad with
     ``OUT_OF_RANGE_LABEL``, which one-hots to a zero row).
@@ -84,6 +87,10 @@ def segsum_policy_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
     kernel = functools.partial(_segsum_policy_kernel,
                                num_segments=num_segments,
                                seg_offset=seg_offset, policy=policy)
+    # the policy's init is the one source of truth for per-component carry
+    # shapes/dtypes (exact2 mixes int32 limbs with f32 residuals, and its
+    # carries are half the domain width); the zeros are traced away
+    carry0 = policy.init(num_segments, d)
     out = pl.pallas_call(
         kernel,
         grid=(nb,),
@@ -91,10 +98,9 @@ def segsum_policy_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
             pl.BlockSpec((block_rows, 1), lambda b: (b, 0)),
             pl.BlockSpec((block_rows, d), lambda b: (b, 0)),
         ],
-        out_specs=[pl.BlockSpec((num_segments, d), lambda b: (0, 0))
-                   for _ in range(policy.carry_len)],
-        out_shape=[jax.ShapeDtypeStruct((num_segments, d), policy.acc_dtype)
-                   for _ in range(policy.carry_len)],
+        out_specs=[pl.BlockSpec(c.shape, lambda b: (0, 0))
+                   for c in carry0],
+        out_shape=[jax.ShapeDtypeStruct(c.shape, c.dtype) for c in carry0],
         interpret=interpret,
     )(ids2, values)
     return tuple(out) if isinstance(out, (list, tuple)) else (out,)

@@ -7,14 +7,17 @@ first-class knobs:
 
   * **policy** (accuracy): ``fast`` (f32 fixed pairing tree),
     ``compensated`` (Kahan/two-sum), ``exact`` (INTAC single-limb int32),
-    ``exact2`` (two-limb carry-save — full resolution at any N), and
-    ``procrastinate`` (exponent-indexed bins — <=1 ulp for arbitrary f32
-    absent catastrophic cancellation)
+    ``exact2`` (three-limb carry-save: full resolution at any N and <=1
+    ulp of the f64 reference for arbitrary f32 via the residual limb),
+    and ``procrastinate`` (exponent-indexed bins — <=1 ulp for arbitrary
+    f32 absent catastrophic cancellation)
     — ``policy.py``, extensible via ``@register_policy``.
   * **backend** (executor): ``ref`` / ``blocked`` / ``pallas`` /
     ``shard_map`` (multi-device) — all run the same block schedule so
-    results match bitwise (integer tiers: at any shard count) —
-    ``backends.py``, extensible via ``@register_backend``.
+    results match bitwise per policy; integer carry state (all of
+    exact/procrastinate, exact2's int32 limbs) additionally matches
+    bitwise at any shard count — ``backends.py``, extensible via
+    ``@register_backend``.
 
 Entry points:
   ``reduce(values, segment_ids=..., num_segments=..., op=..., ...)``
@@ -32,10 +35,10 @@ Entry points:
 
 from .accumulator import (Accumulator, BinAccumulator,  # noqa: F401
                           FlashAccumulator, KahanAccumulator,
-                          LimbAccumulator, TreeAccumulator,
-                          accumulate_microbatch_grads, merge_across,
-                          merge_tree, reduce_microbatch_grads,
-                          scan_accumulate)
+                          Limb3Accumulator, LimbAccumulator,
+                          TreeAccumulator, accumulate_microbatch_grads,
+                          merge_across, merge_tree,
+                          reduce_microbatch_grads, scan_accumulate)
 from .api import ReduceSpec, reduce  # noqa: F401
 from .backends import (BACKENDS, Backend, OUT_OF_RANGE_LABEL,  # noqa: F401
                        ambient_mesh, default_mesh, get_backend,
@@ -65,7 +68,8 @@ __all__ = [
     "select_backend", "select_local_backend", "mask_out_of_range",
     "ambient_mesh", "default_mesh",
     "Accumulator", "TreeAccumulator", "KahanAccumulator",
-    "LimbAccumulator", "BinAccumulator", "FlashAccumulator",
+    "LimbAccumulator", "Limb3Accumulator", "BinAccumulator",
+    "FlashAccumulator",
     "scan_accumulate", "merge_tree", "merge_across",
     "accumulate_microbatch_grads", "reduce_microbatch_grads",
     "collective_mean", "collective_mean_tree", "COLLECTIVE_POLICIES",

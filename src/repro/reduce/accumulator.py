@@ -24,6 +24,12 @@ Instances:
     ~f64 accuracy.
   * ``LimbAccumulator``  — INTAC two-limb int32 carry-save (wraps
     ``core.intac``): exact, order-independent, one rounding at finalize.
+  * ``Limb3Accumulator`` — the three-limb variant: the exactly-captured
+    quantization residual rides along as a compensated f32 limb, so the
+    finalized sum is within 1 ulp of the f64 reference for arbitrary f32
+    streams — not just values on the scale's dyadic grid.  Integer limbs
+    keep the bitwise order-independent contract; the residual pair is
+    order-pinned tolerance.
   * ``BinAccumulator``   — exponent-indexed "procrastination" bins (wraps
     ``core.intac`` bin_split/combine): exact for any f32 within the
     window, order-independent, all rounding deferred to finalize.
@@ -161,6 +167,51 @@ class LimbAccumulator:
         return intac.limb_finalize(state)
 
 
+class Limb3Accumulator:
+    """INTAC three-limb carry-save accumulation: exact for arbitrary f32.
+
+    ``LimbAccumulator`` with the dyadic-grid caveat removed: pushes split
+    each operand losslessly into (hi, lo, residual) — the residual is
+    what quantization rounded away, captured exactly and folded through a
+    compensated ``two_sum`` pair.  The integer limbs keep the bitwise
+    order-independent contract; ``finalize`` is one carry-resolve +
+    compensated combine within 1 ulp of the f64 reference.
+
+    >>> import jax.numpy as jnp
+    >>> acc = Limb3Accumulator(2.0 ** 16)
+    >>> st = acc.init(jnp.zeros(1))
+    >>> for _ in range(3):
+    ...     st = acc.push(st, jnp.asarray([1 / 3]))    # off the grid
+    >>> float(abs(acc.finalize(st)[0] - 1.0)) < 1e-7
+    True
+    """
+
+    def __init__(self, scale):
+        self.scale = scale
+
+    def init(self, template) -> intac.Limb3State:
+        return intac.limb3_init(jnp.shape(template), self.scale)
+
+    def push(self, state, x) -> intac.Limb3State:
+        return intac.limb_add3(state, x)
+
+    def merge(self, a, b) -> intac.Limb3State:
+        return intac.limb_merge3(a, b)
+
+    def merge_across(self, state, axis_names):
+        """Cross-device merge (inside shard_map), taken by the module
+        ``merge_across`` in place of its generic paths: the one shared
+        three-limb lowering (``core.intac.limb3_merge_across`` — int
+        limbs psum, residual pair folds in device order); the shared
+        scale leaf passes through untouched."""
+        hi, lo, res, comp = intac.limb3_merge_across(
+            state.hi, state.lo, state.res, state.comp, axis_names)
+        return intac.Limb3State(hi, lo, res, comp, state.scale)
+
+    def finalize(self, state) -> jnp.ndarray:
+        return intac.limb3_finalize(state)
+
+
 class BinAccumulator:
     """Exponent-indexed bin accumulation (Liguori's procrastination /
     Neal's small superaccumulator, int32 edition).
@@ -261,9 +312,11 @@ def merge_across(acc: Accumulator, state, axis_names):
     Every ``Accumulator`` states its combiner as ``merge``; this is the
     collective face of that contract — the same role
     ``collective.merge_carry_across`` plays for policy carries.  An
-    accumulator declaring ``merge_is_add`` (every state leaf merges by
-    plain addition, e.g. BinAccumulator) reduces with one associative
-    ``psum`` per leaf; otherwise each leaf all-gathers along
+    accumulator with its own ``merge_across`` method (Limb3Accumulator:
+    psum'd integer limbs + an order-pinned residual fold) keeps full
+    control of the lowering; one declaring ``merge_is_add`` (every state
+    leaf merges by plain addition, e.g. BinAccumulator) reduces with one
+    associative ``psum`` per leaf; otherwise each leaf all-gathers along
     ``axis_names`` and the per-device states fold strictly in device
     order, so the combine schedule is a pure function of the mesh —
     deterministic, and exact whenever ``merge`` is (LimbAccumulator,
@@ -285,6 +338,9 @@ def merge_across(acc: Accumulator, state, axis_names):
     [2.0, 3.0]
     """
     axes = tuple(axis_names)
+    own = getattr(acc, "merge_across", None)
+    if callable(own):
+        return own(state, axes)
     if getattr(acc, "merge_is_add", False):
         return jax.tree.map(lambda x: jax.lax.psum(x, axes), state)
     gathered = jax.tree.map(

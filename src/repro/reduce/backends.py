@@ -19,13 +19,15 @@ addition order, results are bitwise identical across backends:
   * ``shard_map`` — the multi-device executor: whole blocks of the same
                     schedule split across a device mesh, each shard runs a
                     local backend over its blocks, and the per-shard policy
-                    carries merge with the policy's associative combiner
-                    (``merge_carry_across``) before one finalize.  Because
-                    the integer tiers' carries merge by associative int32
-                    addition, their results are bitwise identical to the
-                    single-device schedule *at any shard count*; the float
-                    tiers keep documented tolerance instead (see
-                    docs/architecture.md).
+                    carries merge with the policy's own combiner
+                    (``merge_carry_across`` -> ``Policy.merge_across``)
+                    before one finalize.  Integer carry components merge
+                    by associative int32 psum — bitwise identical to the
+                    single-device schedule *at any shard count* (all of
+                    exact/procrastinate, and exact2's hi/lo limbs); float
+                    carry state (fast/compensated carries, exact2's
+                    residual pair) keeps documented tolerance via an
+                    order-pinned fold instead (see docs/architecture.md).
 
 New executors (GPU pallas, ...) drop in with ``@register_backend``; the
 supported-policies capability set gates both explicit selection and
@@ -218,16 +220,17 @@ def _pad_to_blocks(values, segment_ids, block_size):
             segment_ids.reshape(nb, block_size).astype(jnp.int32), nb)
 
 
-def _block_contrib(vals, ids, num_segments, acc_dtype):
-    """One schedule step: the (S, D) one-hot matmul for one (B, D) block.
+def _block_contrib(vals, ids, num_segments, policy):
+    """One schedule step for one (B, W) block: build the (B, S) boolean
+    one-hot and let the policy run its dot(s).
 
     Written identically to the pallas kernel body (ids as a (B, 1) column
-    against a (1, S) label row, then ``jnp.dot``) so every backend lowers
-    to the same dot_general and the cross-backend bitwise contract holds.
+    against a (1, S) label row, then ``policy.contrib``) so every backend
+    lowers to the same dot_general(s) and the cross-backend bitwise
+    contract holds.
     """
     labels = jnp.arange(num_segments, dtype=jnp.int32)[None, :]
-    onehot = (ids[:, None] == labels).astype(vals.dtype)
-    return jnp.dot(onehot.T, vals, preferred_element_type=acc_dtype)
+    return policy.contrib(ids[:, None] == labels, vals)
 
 
 # ---------------------------------------------------------------------------
@@ -243,8 +246,7 @@ def _run_ref(values, segment_ids, num_segments, *, policy: Policy,
     vb, ib, nb = _pad_to_blocks(values, segment_ids, block_size)
     carry = policy.init(num_segments, values.shape[1])
     for b in range(nb):
-        contrib = _block_contrib(vb[b], ib[b], num_segments,
-                                 policy.acc_dtype)
+        contrib = _block_contrib(vb[b], ib[b], num_segments, policy)
         carry = policy.update(carry, contrib)
         # pin the block boundary: without it XLA may fuse the unrolled
         # blocks and reassociate degenerate (S=1) dots, breaking the
@@ -262,7 +264,7 @@ def _run_blocked(values, segment_ids, num_segments, *, policy: Policy,
 
     def step(carry, blk):
         vals, ids = blk
-        contrib = _block_contrib(vals, ids, num_segments, policy.acc_dtype)
+        contrib = _block_contrib(vals, ids, num_segments, policy)
         return policy.update(carry, contrib), None
 
     carry0 = policy.init(num_segments, values.shape[1])
@@ -318,10 +320,13 @@ def _run_shard_map(values, segment_ids, num_segments, *, policy: Policy,
     finalize happens on the merged carry, outside this function, exactly
     as on every other backend.
 
-    Invariant: for the integer tiers (exact / exact2 / procrastinate) the
-    result is bitwise identical to the single-device schedule at any
-    shard count, because ``prepare`` already fixed the global quantization
-    scale / window anchor and integer carry addition is associative.  The
+    Invariant: integer carry state is bitwise identical to the
+    single-device schedule at any shard count, because ``prepare`` already
+    fixed the global quantization scale / window anchor and integer carry
+    addition is associative — that is the whole result for ``exact`` /
+    ``procrastinate``, and the int32 hi/lo limbs for ``exact2`` (whose
+    finalized float also folds the residual limb: within 1 ulp of the f64
+    reference, tolerance rather than bits across shard counts).  The
     float tiers (fast / compensated) change their cross-shard combine
     order with the shard count — documented tolerance, not bitwise.
     """

@@ -16,10 +16,12 @@ they are the same accuracy knob the array API exposes:
   * ``exact``       — full-width INTAC integer psum: bitwise-deterministic
     for any reduction topology / pod layout, no compression.  The shared
     scale shrinks with the device count (single-limb headroom).
-  * ``exact2``      — two-limb INTAC integer psum: the per-device hi/lo
-    limb split keeps full-resolution quantization (scale sized by
-    magnitude alone) for up to 2^15 devices; one carry-resolve per
-    reduction.
+  * ``exact2``      — three-limb INTAC psum: the per-device hi/lo limb
+    split keeps full-resolution quantization (scale sized by magnitude
+    alone) for up to 2^15 devices, and the exactly-captured quantization
+    residual rides along as a compensated third limb (device-order
+    two_sum fold), so the mean is within 1 ulp of the f64 reference for
+    arbitrary f32 gradients; one carry-resolve per reduction.
   * ``procrastinate`` — per-exponent-bin integer psum: each device splits
     its gradient into exponent-window digits, every bin psums in the
     exact integer domain, and one carry-resolve + compensated combine
@@ -36,9 +38,10 @@ Must be called inside ``shard_map`` (they use named-axis collectives).
 ``merge_carry_across`` is the second face of this module: where
 ``collective_mean`` reduces *raw gradients* across devices, it reduces
 *policy carries* — the partial block-schedule state each shard of the
-``shard_map`` backend produced — with the policy's own associative
-combiner (one integer ``psum`` per carry component for the exact tiers,
-a gathered in-order two-sum fold for compensated).
+``shard_map`` backend produced — with the policy's own combiner (one
+integer ``psum`` per integer carry component, a gathered in-order
+two-sum fold for order-sensitive float state: compensated's carry,
+exact2's residual limb).
 """
 
 from __future__ import annotations
@@ -59,23 +62,16 @@ def merge_carry_across(policy: Policy, carry, axis_names):
     """Merge per-shard policy carries across mesh axes (inside shard_map).
 
     ``carry`` is the policy carry tuple a local backend produced from a
-    shard's blocks.  When ``policy.merge`` is plain addition (every
-    integer tier: int32 sums are associative, so any psum topology gives
-    the same bits — the ``intac_psum2``/``bin_psum`` argument applied to
-    carries that are *already* in the integer domain), each component
-    psums directly.  Otherwise the carries all-gather and fold strictly
-    in device order with ``policy.merge``, which pins the combine
-    schedule the way the block schedule pins per-shard order.
+    shard's blocks.  The lowering is the policy's own
+    (``Policy.merge_across``): one associative int32 psum per integer
+    carry component (any psum topology gives the same bits — the
+    ``intac_psum3``/``bin_psum`` argument applied to carries that are
+    *already* in the integer domain), and an all-gather + strict
+    device-order fold with ``policy.merge`` for order-sensitive float
+    state (compensated's carry, exact2's residual pair), which pins the
+    combine schedule the way the block schedule pins per-shard order.
     """
-    axes = tuple(axis_names)
-    if policy.merge_is_add:
-        return tuple(jax.lax.psum(c, axes) for c in carry)
-    gathered = tuple(jax.lax.all_gather(c, axes, axis=0) for c in carry)
-    nshards = gathered[0].shape[0]
-    merged = tuple(g[0] for g in gathered)
-    for k in range(1, nshards):
-        merged = policy.merge(merged, tuple(g[k] for g in gathered))
-    return merged
+    return policy.merge_across(carry, axis_names)
 
 
 def collective_mean(x: jnp.ndarray, axis_names: Sequence[str], *,
@@ -117,7 +113,7 @@ def collective_mean(x: jnp.ndarray, axis_names: Sequence[str], *,
 
     if policy == "exact2":
         n = jax.lax.psum(1, axes)
-        return intac.intac_psum2(x, axes) / n, residual
+        return intac.intac_psum3(x, axes) / n, residual
 
     if policy == "procrastinate":
         n = jax.lax.psum(1, axes)

@@ -16,11 +16,16 @@ same block schedule (so a policy swap never changes the data movement):
     paper's "pay for normalization once per set".  The scale is sized so
     the *whole stream* fits single-limb int32 headroom, so resolution
     shrinks as 1/N: cheap state, but long streams lose precision.
-  * ``exact2``        — two-limb int32 carry-save (``core.intac.LimbState``
-    semantics): the per-block contribution splits into (hi, lo) limbs, so
-    headroom comes from the second limb instead of the scale.  Resolution
-    is fixed at ~2^-21 of max |x| for any stream length up to 2^24 rows —
-    exact at any N for values on the scale's dyadic grid.
+  * ``exact2``        — three-limb int32+residual carry-save
+    (``core.intac.Limb3State`` semantics): the per-block contribution
+    splits into (hi, lo) limbs — headroom from the second limb instead of
+    the scale — while the third limb carries the exactly-captured
+    quantization residual ``x - descale(quantize(x, scale), scale)``
+    compensated-style.  The integer limbs stay bitwise order/block/
+    backend-invariant; the residual limb closes the old dyadic-grid gap,
+    so the finalized sum is within 1 ulp of the f64 reference for
+    *arbitrary* f32 inputs at any stream length up to 2^24 rows (the
+    residual's float fold gives tolerance, not bits, under re-ordering).
   * ``procrastinate`` — exponent-indexed bins after Liguori (arXiv
     2406.05866) / Neal (arXiv 1505.05571): each f32 value splits exactly
     into per-exponent-window integer digits, bins accumulate in int32,
@@ -31,21 +36,33 @@ same block schedule (so a policy swap never changes the data movement):
     catastrophic cancellation the bound is absolute — N * 2^-49 of the
     max — not relative), at NUM_BINS x the accumulator state.
 
-The three integer tiers are bitwise order-independent: any block size,
-backend, input permutation, or device layout produces identical bits.
+The integer tiers' integer state is bitwise order-independent: any block
+size, backend, input permutation, or device layout produces identical
+bits for ``exact``/``procrastinate`` results and for ``exact2``'s int32
+hi/lo limbs (``exact2``'s *finalized float* additionally folds the
+residual limb — deterministic for a fixed schedule, ulp-level tolerance
+across schedules).
 
-A policy owns four hooks, each pure and shape-polymorphic:
+A policy owns five hooks, each pure and shape-polymorphic:
 
   ``prepare(values, num_terms)``      -> (domain_values, ctx)
+  ``contrib(onehot, vals)``           -> one block's contribution: the
+                                         (S, D) one-hot matmul(s) mapping
+                                         a (B, W) domain block into what
+                                         ``update`` folds (policies with a
+                                         multi-part domain, e.g. exact2's
+                                         quantized + residual halves, run
+                                         one dot per part)
   ``init / update``                   -> the per-block carry (a tuple of
                                          ``carry_len`` arrays all backends
                                          thread identically; the pallas
-                                         kernel executes ``update`` inside
-                                         its grid loop)
+                                         kernel executes ``contrib`` +
+                                         ``update`` inside its grid loop)
   ``merge(a, b)``                     -> combine two partial carries
                                          (cross-shard / cross-device); the
-                                         associative combiner the
-                                         ``shard_map`` backend folds with
+                                         combiner the ``shard_map`` backend
+                                         folds with (``merge_across`` lifts
+                                         it to named-axis collectives)
   ``finalize(carry, ctx)``            -> (S, D) f32
 
 New tiers register with ``@register_policy`` and immediately work on every
@@ -57,8 +74,9 @@ traced into the kernel body) and ``init`` must be zeros.
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 # Direct submodule import (not ``from repro.core import ...``): this
@@ -100,7 +118,7 @@ def get_policy(name: str) -> "Policy":
     """Look up a registered policy instance by name.
 
     >>> get_policy("exact2").carry_len
-    2
+    4
     >>> get_policy("psychic")
     Traceback (most recent call last):
         ...
@@ -133,7 +151,15 @@ class Policy:
     #: integer tiers: associative, any reduction topology gives the same
     #: bits).  False forces the gathered in-order fold (compensated: its
     #: two-sum merge is order-sensitive, so the fold order must be pinned).
+    #: Mixed carries (exact2: psum'able integer limbs + an order-pinned
+    #: residual pair) override ``merge_across`` instead.
     merge_is_add: bool = True
+
+    @property
+    def carry_dtypes(self) -> Tuple:
+        """dtype of each carry component; uniform ``acc_dtype`` unless a
+        policy mixes domains (exact2: int32 limbs + f32 residual pair)."""
+        return (self.acc_dtype,) * self.carry_len
 
     def prepare(self, values: jnp.ndarray, num_terms: int):
         """Map raw (N, D) values into the accumulation domain.
@@ -144,8 +170,23 @@ class Policy:
         """
         return values.astype(jnp.float32), None
 
+    def contrib(self, onehot: jnp.ndarray, vals: jnp.ndarray):
+        """One schedule step: map a (B, S) boolean one-hot and a (B, W)
+        domain block to the contribution ``update`` folds.
+
+        Every backend (and the pallas kernel body) builds the same boolean
+        one-hot and delegates here, so the dot lowering — and with it the
+        cross-backend bitwise contract — is defined once, by the policy.
+        """
+        return jnp.dot(onehot.astype(vals.dtype).T, vals,
+                       preferred_element_type=self.acc_dtype)
+
     def init(self, num_segments: int, d: int):
-        return (jnp.zeros((num_segments, d), self.acc_dtype),)
+        """Zero carry, one (num_segments, d) array per ``carry_dtypes``
+        entry; ``d`` is the *domain* width — policies whose carries are
+        narrower than their domain (exact2) override."""
+        return tuple(jnp.zeros((num_segments, d), dt)
+                     for dt in self.carry_dtypes)
 
     def update(self, carry, contrib):
         return (carry[0] + contrib,)
@@ -161,6 +202,27 @@ class Policy:
         ``merge_is_add``.
         """
         return tuple(x + y for x, y in zip(a, b))
+
+    def merge_across(self, carry, axis_names):
+        """Merge per-shard carries across mesh axes (inside shard_map).
+
+        The collective face of ``merge``: when ``merge_is_add``, each
+        component reduces with one associative ``lax.psum`` (any reduction
+        topology, same bits — the integer-tier contract); otherwise the
+        carries all-gather and fold strictly in device order with
+        ``merge``, pinning the combine schedule the way the block schedule
+        pins per-shard order.  Policies with mixed carries (exact2)
+        override this with a per-component lowering.
+        """
+        axes = tuple(axis_names)
+        if self.merge_is_add:
+            return tuple(jax.lax.psum(c, axes) for c in carry)
+        gathered = tuple(jax.lax.all_gather(c, axes, axis=0) for c in carry)
+        nshards = gathered[0].shape[0]
+        merged = tuple(g[0] for g in gathered)
+        for k in range(1, nshards):
+            merged = self.merge(merged, tuple(g[k] for g in gathered))
+        return merged
 
     def finalize(self, carry, ctx) -> jnp.ndarray:
         return carry[0]
@@ -180,10 +242,6 @@ class CompensatedPolicy(Policy):
     name = "compensated"
     carry_len = 2
     merge_is_add = False            # two-sum merge is order-sensitive
-
-    def init(self, num_segments: int, d: int):
-        z = jnp.zeros((num_segments, d), jnp.float32)
-        return (z, z)
 
     def update(self, carry, contrib):
         acc, comp = carry
@@ -221,29 +279,39 @@ class ExactPolicy(Policy):
         scale = choose_scale(jnp.max(jnp.abs(v)), max(num_terms, 1))
         return quantize(v, scale), scale
 
-    def init(self, num_segments: int, d: int):
-        return (jnp.zeros((num_segments, d), jnp.int32),)
-
     def finalize(self, carry, ctx) -> jnp.ndarray:
         return dequantize(carry[0], ctx)
 
 
 @register_policy
 class Exact2Policy(Policy):
-    """Two-limb INTAC carry-save: headroom no longer trades against
-    resolution.
+    """Three-limb INTAC carry-save: headroom no longer trades against
+    resolution, and "exact" means exact off the dyadic grid too.
 
     The scale is sized by magnitude alone (``QBITS`` bits below int32, so
-    a 512-row block contribution cannot overflow), and each block's int32
-    contribution splits into (hi, lo) limbs on the way into the carry —
-    ``core.intac.LimbState`` semantics threaded through the block
-    schedule.  Up to 2^24 rows accumulate carry-free; ``finalize`` is one
-    ``limbs_resolve`` whose integer canonicalization makes the result
-    bitwise independent of block size, backend, and input order.
+    a 512-row block contribution cannot overflow), each block's int32
+    contribution splits into (hi, lo) limbs on the way into the carry,
+    and the third limb carries what quantization rounded away — the
+    per-element residual ``x - descale(quantize(x, scale), scale)``,
+    captured *exactly* (Dekker/Sterbenz; see ``core.intac.limb_split3``)
+    in ``prepare`` and folded compensated-style (``two_sum`` + pooled
+    compensation) through the schedule.  ``core.intac.Limb3State``
+    semantics threaded through the block schedule: up to 2^24 rows
+    accumulate carry-free; ``finalize`` is one ``limbs_resolve3``.
+
+    Guarantee split: the int32 hi/lo limbs are bitwise independent of
+    block size, backend, shard count, and input order (associative
+    integer adds + canonical carry-resolve); the finalized float — which
+    also folds the residual limb — is within 1 ulp of the f64 reference
+    for arbitrary f32 inputs, deterministic for a fixed schedule, but
+    drifts at the ulp level when the residual fold order changes (block
+    size / shard count / permutation).  Old behavior — silently dropping
+    sub-quantum bits of non-dyadic inputs — was a defect, not a contract.
     """
 
     name = "exact2"
-    carry_len = 2
+    #: (hi, lo) int32 limbs + (res, comp) compensated f32 residual pair
+    carry_len = 4
     acc_dtype = jnp.int32
     #: per-value quantization bits: block contribs stay below int32 for
     #: blocks up to 2^(30-QBITS) = 512 rows
@@ -254,31 +322,74 @@ class Exact2Policy(Policy):
     #: count — is what the int32 limb sums bound: 2^16 blocks is the hard
     #: ceiling; 2^15 keeps a 2x margin (2^24 rows at the max block size,
     #: proportionally fewer for smaller blocks — both guards enforced).
+    #: The residual limb adds no bound of its own: per-element residuals
+    #: are below half a quantum, so the f32 fold cannot overflow.
     max_blocks = 1 << (30 - intac.LIMB_SHIFT)
     MAX_TERMS = max_block_size * max_blocks
+    #: the residual pair merges through an order-pinned two_sum fold;
+    #: the integer limbs still psum — see ``merge_across``
+    merge_is_add = False
+
+    @property
+    def carry_dtypes(self):
+        return (jnp.int32, jnp.int32, jnp.float32, jnp.float32)
 
     def prepare(self, values: jnp.ndarray, num_terms: int):
         if num_terms > self.MAX_TERMS:
             raise ValueError(
                 f"exact2: {num_terms} rows exceed the two-limb headroom "
                 f"bound ({self.MAX_TERMS}); split the stream and merge "
-                f"with core.intac.limb_merge")
+                f"with core.intac.limb_merge3")
         v = values.astype(jnp.float32)
         scale = choose_scale(jnp.max(jnp.abs(v)), 1, qbits=self.QBITS)
-        return quantize(v, scale), scale
+        q = quantize(v, scale)
+        res = v - dequantize(q, scale)        # exact: Dekker/Sterbenz
+        # one (N, 2D) f32 domain: quantized half | residual half.  The
+        # quantized values are below 2^QBITS = 2^21 in magnitude, so the
+        # f32 round-trip back to int32 in ``contrib`` is exact.
+        return jnp.concatenate([q.astype(jnp.float32), res], axis=1), scale
+
+    def contrib(self, onehot: jnp.ndarray, vals: jnp.ndarray):
+        """Two dots per block: the quantized half in exact int32, the
+        residual half in f32 (the same dot lowering on every backend)."""
+        d = vals.shape[1] // 2
+        ci = jnp.dot(onehot.astype(jnp.int32).T,
+                     vals[:, :d].astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+        cr = jnp.dot(onehot.astype(jnp.float32).T, vals[:, d:],
+                     preferred_element_type=jnp.float32)
+        return (ci, cr)
 
     def init(self, num_segments: int, d: int):
-        z = jnp.zeros((num_segments, d), jnp.int32)
-        return (z, z)
+        # d is the (N, 2D) domain width: carries are (S, D)
+        z = jnp.zeros((num_segments, d // 2), jnp.int32)
+        r = jnp.zeros((num_segments, d // 2), jnp.float32)
+        return (z, z, r, r)
 
     def update(self, carry, contrib):
-        hi, lo = carry
-        chi, clo = intac.limb_split(contrib)
-        return (hi + chi, lo + clo)
+        hi, lo, res, comp = carry
+        ci, cr = contrib
+        chi, clo = intac.limb_split(ci)
+        s, e = two_sum(res, cr)
+        return (hi + chi, lo + clo, s, comp + e)
+
+    def merge(self, a, b):
+        """Integer limbs add exactly (any order, same bits); the residual
+        pair merges through ``two_sum`` with pooled compensation."""
+        s, e = two_sum(a[2], b[2])
+        return (a[0] + b[0], a[1] + b[1], s, a[3] + b[3] + e)
+
+    def merge_across(self, carry, axis_names):
+        """Mixed lowering: one associative int32 psum per integer limb
+        (bitwise identical to the single-device schedule at any shard
+        count), and an all-gather + strict device-order two_sum fold for
+        the residual pair (deterministic; tolerance, not bits) — the one
+        shared implementation in ``core.intac.limb3_merge_across``."""
+        return intac.limb3_merge_across(*carry, axis_names)
 
     def finalize(self, carry, ctx) -> jnp.ndarray:
-        hi, lo = carry
-        return intac.limbs_resolve(hi, lo, ctx)
+        hi, lo, res, comp = carry
+        return intac.limbs_resolve3(hi, lo, res, ctx, comp=comp)
 
 
 @register_policy

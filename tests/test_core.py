@@ -169,6 +169,88 @@ def test_limb_resolve_is_decomposition_independent():
     assert float(a) == float(b)
 
 
+def test_limb_split3_is_lossless():
+    """The three-limb split loses nothing: x == (hi*2^15 + lo)/scale + r
+    holds *exactly* in f64 (the residual capture is exact Dekker/Sterbenz
+    arithmetic), even for values far off the scale's dyadic grid."""
+    scale = np.float32(2.0 ** 12)
+    for v in (1 / 3, -2.7182818, 1.0000001, 123.4567, 1e-6, -1e-9, 0.0):
+        x = np.float32(v)
+        hi, lo, r = intac.limb_split3(jnp.float32(x), scale)
+        q = int(hi) * (1 << intac.LIMB_SHIFT) + int(lo)
+        assert np.float64(q) / np.float64(scale) + np.float64(np.float32(r)) \
+            == np.float64(x)
+
+
+def test_limbs_resolve3_decomposition_independent_and_1ulp():
+    """The integer canonicalization makes resolve3 independent of the
+    (hi, lo) decomposition, and the compensated combine lands within 1
+    ulp of the f64 reference even when hi exceeds the f32 mantissa."""
+    scale = jnp.float32(1.0)
+    res = jnp.float32(0.37)
+    a = intac.limbs_resolve3(jnp.int32(1000), jnp.int32(2 ** 26 + 123),
+                             res, scale)
+    hi2, lo2 = (np.int32(v) for v in
+                intac.limbs_canonical(jnp.int32(1000),
+                                      jnp.int32(2 ** 26 + 123)))
+    b = intac.limbs_resolve3(jnp.asarray(hi2), jnp.asarray(lo2), res, scale)
+    assert float(a) == float(b)
+    # hi*2^15 needs >24 bits: the split-and-two_sum combine must not lose
+    # the low-order quanta the naive f32 conversion rounds away
+    hi, lo = jnp.int32(1 << 26), jnp.int32(3)
+    ref = np.float64((1 << 26) * (1 << 15) + 3) + np.float64(0.37)
+    got = float(intac.limbs_resolve3(hi, lo, res, scale))
+    assert abs(got - float(ref)) <= np.spacing(np.float32(ref),
+                                               dtype=np.float32)
+
+
+def test_limb3_accumulate_off_grid_within_1ulp():
+    """Off-grid stream (1/3-ish values): the three-limb path tracks the
+    f64 oracle to 1 ulp where the two-limb path visibly rounds, and the
+    split/merge law holds with bitwise-equal canonical integer limbs."""
+    rng = np.random.RandomState(29)
+    xs = (rng.randn(256, 4) / 3 + np.float32(1 / 3)).astype(np.float32)
+    scale = 2.0 ** 16
+    st = intac.limb3_init((4,), scale)
+    for r in xs:
+        st = intac.limb_add3(st, jnp.asarray(r))
+    ref = np.sum(xs.astype(np.float64), axis=0)
+    out3 = np.asarray(intac.limb3_finalize(st))
+    assert (np.abs(out3 - ref)
+            <= np.spacing(np.abs(ref.astype(np.float32)))).all()
+    st2 = intac.limb_init((4,), scale)
+    for r in xs:
+        st2 = intac.limb_add(st2, jnp.asarray(r))
+    out2 = np.asarray(intac.limb_finalize(st2))
+    assert (np.abs(out2 - ref)
+            > np.spacing(np.abs(ref.astype(np.float32)))).any()
+    # split/merge law
+    a = intac.limb3_init((4,), scale)
+    b = intac.limb3_init((4,), scale)
+    for r in xs[:128]:
+        a = intac.limb_add3(a, jnp.asarray(r))
+    for r in xs[128:]:
+        b = intac.limb_add3(b, jnp.asarray(r))
+    m = intac.limb_merge3(a, b)
+    for u, v in zip(intac.limbs_canonical(m.hi, m.lo),
+                    intac.limbs_canonical(st.hi, st.lo)):
+        assert np.array_equal(np.asarray(u), np.asarray(v))
+    assert (np.abs(np.asarray(intac.limb3_finalize(m)) - ref)
+            <= np.spacing(np.abs(ref.astype(np.float32)))).all()
+
+
+def test_choose_scale_zero_and_nan_streams_are_benign():
+    """max_abs == 0 (all-zero or all-padding stream) pins the unit scale
+    instead of the degenerate near-2^127 clamp; a NaN statistic must not
+    poison the scale either."""
+    assert float(intac.choose_scale(jnp.float32(0.0), 1024)) == 1.0
+    assert float(intac.choose_scale(jnp.float32(0.0), 1)) == 1.0
+    s = float(intac.choose_scale(jnp.float32(np.nan), 16))
+    assert np.isfinite(s) and s == 1.0
+    # tiny-but-nonzero streams keep the clamped-scale behavior
+    assert float(intac.choose_scale(jnp.float32(2e-38), 2)) == 2.0 ** 127
+
+
 def test_bin_split_combine_exact_roundtrip():
     """Exponent-bin digits reconstruct arbitrary f32 exactly within the
     48-bit window, and the bin sums are bitwise permutation-invariant."""

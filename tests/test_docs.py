@@ -7,8 +7,11 @@ is caught on any plain ``pytest`` run too.
 
 import doctest
 import importlib
+import subprocess
 import sys
 from pathlib import Path
+
+import pytest
 
 REPO = Path(__file__).resolve().parent.parent
 
@@ -20,6 +23,7 @@ def test_doc_references_resolve():
     errors = []
     for f in check_docs.DOC_FILES:
         errors.extend(check_docs.check_file(f))
+    errors.extend(check_docs.check_required_symbols())
     assert not errors, "\n".join(errors)
 
 
@@ -46,6 +50,26 @@ def test_no_stale_shim_references_in_sources_or_docs():
             hits.extend(f"{f.relative_to(REPO)}: {s}"
                         for s in stale if s in text)
     assert not hits, hits
+
+
+def test_no_tracked_bytecode():
+    """Build products must never be committed (a past commit checked
+    ``src/repro/**/__pycache__`` .pyc binaries in): the git index must
+    hold no ``.pyc``/``__pycache__`` paths, and .gitignore must keep it
+    that way.  CI mirrors this as an explicit hygiene step."""
+    try:
+        out = subprocess.run(["git", "ls-files"], cwd=REPO,
+                             capture_output=True, text=True, timeout=60)
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if out.returncode != 0:
+        pytest.skip("not a git checkout")
+    tracked = out.stdout.splitlines()
+    bad = [p for p in tracked
+           if p.endswith((".pyc", ".pyo")) or "__pycache__" in p]
+    assert not bad, f"tracked bytecode: {bad}"
+    gitignore = (REPO / ".gitignore").read_text()
+    assert "__pycache__/" in gitignore and "*.py[cod]" in gitignore
 
 
 def test_reduce_package_doctests_pass():

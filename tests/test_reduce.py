@@ -20,8 +20,13 @@ from repro.kernels import ops
 
 BACKENDS = ("ref", "blocked", "pallas")
 POLICIES = ("fast", "compensated", "exact", "exact2", "procrastinate")
-#: the tiers whose integer domains make results bitwise order-independent
+#: the tiers with integer accumulation domains (exact2's finalized float
+#: additionally folds its compensated residual limb: the *integer limbs*
+#: are bitwise order-independent, the float is ulp-level tolerance when
+#: the fold order changes — see test_exact2_limbs_invariant_result_1ulp)
 INT_POLICIES = ("exact", "exact2", "procrastinate")
+#: the tiers whose *finalized result* is bitwise order-independent
+BITWISE_POLICIES = ("exact", "procrastinate")
 
 
 def _data(n, d, s, dtype, seed=0):
@@ -79,7 +84,7 @@ def test_mean_op_matches_oracle(policy):
                                atol=1e-3, rtol=1e-3)
 
 
-@pytest.mark.parametrize("policy", INT_POLICIES)
+@pytest.mark.parametrize("policy", BITWISE_POLICIES)
 def test_integer_policies_permutation_and_blocksize_invariant(policy):
     x = jnp.asarray(np.random.RandomState(5).randn(4096).astype(np.float32))
     perm = np.random.RandomState(6).permutation(4096)
@@ -89,6 +94,37 @@ def test_integer_policies_permutation_and_blocksize_invariant(policy):
     d = float(R.reduce(x[perm], policy=policy, backend="pallas",
                        block_size=256))
     assert a == b == c == d                        # bitwise
+
+
+def test_exact2_limbs_invariant_result_1ulp():
+    """exact2's split guarantee: the *canonical* int32 hi/lo limbs are
+    bitwise identical under permutation, block size, and backend, while
+    the finalized float (which folds the compensated residual limb, whose
+    fold order follows the schedule) stays within 1 ulp of the f64
+    reference in every configuration."""
+    x = np.random.RandomState(5).randn(4096).astype(np.float32)
+    perm = np.random.RandomState(6).permutation(4096)
+    ref = float(np.sum(x.astype(np.float64)))
+    pol = R.get_policy("exact2")
+    ids = jnp.zeros(4096, jnp.int32)
+
+    def canon_limbs(xv, backend, block_size):
+        domain, ctx = pol.prepare(jnp.asarray(xv)[:, None], 4096)
+        carry = R.get_backend(backend).run(domain, ids, 1, policy=pol,
+                                           block_size=block_size)
+        hi, lo = intac.limbs_canonical(carry[0], carry[1])
+        return np.asarray(hi), np.asarray(lo)
+
+    base = canon_limbs(x, "blocked", 512)
+    for xv, bk, bs in ((x, "blocked", 64), (x[perm], "blocked", 512),
+                       (x, "ref", 128), (x[perm], "pallas", 256)):
+        hi, lo = canon_limbs(xv, bk, bs)
+        assert np.array_equal(base[0], hi) and np.array_equal(base[1], lo)
+
+    for xv, kw in ((x, {}), (x[perm], {}), (x, {"block_size": 64}),
+                   (x[perm], {"backend": "pallas", "block_size": 256})):
+        out = float(R.reduce(jnp.asarray(xv), policy="exact2", **kw))
+        assert abs(out - ref) <= _ulp(ref)
 
 
 def test_exact_policy_tiny_magnitude_stream():
@@ -124,12 +160,14 @@ def test_large_n_exact2_and_procrastinate_keep_resolution():
     assert errs["exact2"] <= _ulp(ref)
     assert errs["procrastinate"] <= _ulp(ref)
 
-    # procrastinate needs no grid: arbitrary f32 data, still <= 1 ulp
+    # procrastinate — and, since the residual limb, exact2 — need no
+    # grid: arbitrary f32 data, still <= 1 ulp
     y = rng.randn(n).astype(np.float32)
     refy = float(np.sum(y.astype(np.float64)))
-    erry = abs(float(R.reduce(jnp.asarray(y), policy="procrastinate",
-                              backend="blocked")) - refy)
-    assert erry <= _ulp(refy)
+    for p in ("procrastinate", "exact2"):
+        erry = abs(float(R.reduce(jnp.asarray(y), policy=p,
+                                  backend="blocked")) - refy)
+        assert erry <= _ulp(refy), p
     assert abs(float(R.reduce(jnp.asarray(y), policy="exact",
                               backend="blocked")) - refy) > _ulp(refy)
 
@@ -152,6 +190,37 @@ def test_exact2_overflow_guards():
     with pytest.raises(ValueError, match="headroom"):
         R.get_policy("procrastinate").prepare(jnp.ones(((1 << 22) + 1, 1)),
                                               (1 << 22) + 1)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_all_zero_stream_is_benign(policy):
+    """max_abs == 0 must yield a benign scale (``choose_scale`` pins the
+    degenerate case to 1.0), not a near-2^127 one or NaN: an all-zero
+    stream reduces to exact zeros on every backend, sums and means."""
+    z = jnp.zeros((1024, 4))
+    for b in BACKENDS:
+        out = np.asarray(R.reduce(z, policy=policy, backend=b))
+        assert np.array_equal(out, np.zeros(4)) and np.isfinite(out).all()
+    m = np.asarray(R.reduce(jnp.zeros(512), policy=policy,
+                            segment_ids=jnp.zeros(512, jnp.int32),
+                            num_segments=2, op="mean"))
+    assert np.array_equal(m, np.zeros(2))
+    scale = float(intac.choose_scale(jnp.float32(0.0), 1024))
+    assert scale == 1.0                      # pinned: benign, not 2^127
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_all_sentinel_block_is_benign(policy):
+    """A stream that is 100% OUT_OF_RANGE_LABEL rows (every payload
+    dropped and zeroed before ``prepare``) must reduce to finite zeros —
+    the integer tiers' scale statistics see max_abs == 0."""
+    vals = jnp.full((256, 3), 1e30)          # huge payloads, all dropped
+    ids = jnp.full((256,), R.OUT_OF_RANGE_LABEL)
+    for op in ("sum", "mean"):
+        out = np.asarray(R.reduce(vals, segment_ids=ids, num_segments=2,
+                                  policy=policy, op=op))
+        assert np.array_equal(out, np.zeros((2, 3)))
+        assert np.isfinite(out).all()
 
 
 def test_compensated_beats_fast_on_ill_conditioned():
@@ -305,9 +374,44 @@ def test_deprecation_shims_are_gone():
 
 def test_protocol_instances_are_accumulators():
     for acc in (R.TreeAccumulator(4), R.KahanAccumulator(),
-                R.LimbAccumulator(2.0 ** 16), R.BinAccumulator(8.0),
-                R.FlashAccumulator()):
+                R.LimbAccumulator(2.0 ** 16), R.Limb3Accumulator(2.0 ** 16),
+                R.BinAccumulator(8.0), R.FlashAccumulator()):
         assert isinstance(acc, R.Accumulator)
+
+
+def test_limb3_accumulator_exact_off_the_grid():
+    """The three-limb accumulator closes LimbAccumulator's dyadic-grid
+    gap: off-grid values (1/3-ish) accumulate to within 1 ulp of the f64
+    oracle, the split halves merge to the same integer limbs as a single
+    pass, and the two-limb accumulator provably cannot match."""
+    rng = np.random.RandomState(23)
+    xs = (rng.randn(64, 8).astype(np.float32) / 3 + np.float32(1 / 3))
+    scale = 2.0 ** 16
+    acc3 = R.Limb3Accumulator(scale)
+    a, b = acc3.init(xs[0]), acc3.init(xs[0])
+    for x in xs[:32]:
+        a = acc3.push(a, jnp.asarray(x))
+    for x in xs[32:]:
+        b = acc3.push(b, jnp.asarray(x))
+    merged_state = acc3.merge(a, b)
+    direct = acc3.init(xs[0])
+    for x in xs:
+        direct = acc3.push(direct, jnp.asarray(x))
+    # integer limbs: canonical pairs bitwise equal, split vs direct
+    for m, d in zip(intac.limbs_canonical(merged_state.hi, merged_state.lo),
+                    intac.limbs_canonical(direct.hi, direct.lo)):
+        assert np.array_equal(np.asarray(m), np.asarray(d))
+    ref = np.sum(xs.astype(np.float64), axis=0)
+    out3 = np.asarray(acc3.finalize(merged_state))
+    assert (np.abs(out3 - ref)
+            <= np.spacing(np.abs(ref.astype(np.float32)))).all()
+    acc2 = R.LimbAccumulator(scale)
+    st2 = acc2.init(xs[0])
+    for x in xs:
+        st2 = acc2.push(st2, jnp.asarray(x))
+    out2 = np.asarray(acc2.finalize(st2))
+    assert (np.abs(out2 - ref)
+            > np.spacing(np.abs(ref.astype(np.float32)))).any()
 
 
 def test_tree_accumulator_push_merge_finalize():

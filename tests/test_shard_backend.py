@@ -20,10 +20,15 @@ import numpy as np
 import pytest
 
 from repro import reduce as R
+from repro.core import intac
 
 REPO = Path(__file__).resolve().parent.parent
 POLICIES = ("fast", "compensated", "exact", "exact2", "procrastinate")
 INT_POLICIES = ("exact", "exact2", "procrastinate")
+#: tiers whose *finalized float* is bitwise at any shard count; exact2's
+#: guarantee splits: canonical int32 limbs bitwise, finalized float (which
+#: folds the residual limb in device order) to ulp-level tolerance
+BITWISE_POLICIES = ("exact", "procrastinate")
 
 
 def _data(n=700, d=8, s=5, seed=0):
@@ -105,12 +110,21 @@ def test_policy_merge_is_the_schedule_split(policy):
     merged = pol.merge(ca, cb)
     out_full = np.asarray(pol.finalize(full, ctx))
     out_merged = np.asarray(pol.finalize(merged, ctx))
-    if policy in INT_POLICIES:
+    if policy in BITWISE_POLICIES:
         assert np.array_equal(out_full, out_merged)
+    elif policy == "exact2":
+        # split guarantee: the canonical integer limbs are bitwise equal
+        # (associative int32 adds), the finalized float — which folds the
+        # residual limb in schedule order — holds ulp-level tolerance
+        for a, b in zip(intac.limbs_canonical(full[0], full[1]),
+                        intac.limbs_canonical(merged[0], merged[1])):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_allclose(out_merged, out_full, rtol=1e-6,
+                                   atol=1e-6)
     else:
         np.testing.assert_allclose(out_merged, out_full, rtol=1e-6,
                                    atol=1e-6)
-    assert pol.merge_is_add == (policy != "compensated")
+    assert pol.merge_is_add == (policy not in ("compensated", "exact2"))
 
 
 def test_merge_across_accumulator_single_device():
@@ -171,6 +185,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh
 from repro import reduce as R
+from repro.core import intac
 
 rng = np.random.RandomState(0)
 n, d, s, bs = 1000, 16, 7, 128            # uneven: 1000 % (8*128) != 0
@@ -191,6 +206,24 @@ for pol in ("fast", "compensated", "exact", "exact2", "procrastinate"):
         rel = float(np.abs(base - out).max()) / scale
         print(f"GRID {pol} {ndev} {bit} {rel:.3e}")
 
+# exact2's integer-limb half of the split guarantee: the canonical hi/lo
+# limbs out of the shard_map backend are bitwise identical to the blocked
+# schedule at every shard count
+pol2 = R.get_policy("exact2")
+mids = R.mask_out_of_range(ids, s)
+mvals = jnp.where((mids >= 0)[:, None], vals, 0.0)
+domain, ctx = pol2.prepare(mvals, n)
+cbase = R.get_backend("blocked").run(domain, mids, s, policy=pol2,
+                                     block_size=bs)
+lbase = [np.asarray(c) for c in intac.limbs_canonical(cbase[0], cbase[1])]
+for ndev in (1, 2, 8):
+    mesh = Mesh(np.asarray(jax.devices()[:ndev]), ("shards",))
+    csh = R.get_backend("shard_map").run(domain, mids, s, policy=pol2,
+                                         block_size=bs, mesh=mesh)
+    lsh = intac.limbs_canonical(csh[0], csh[1])
+    ok = all(np.array_equal(a, np.asarray(b)) for a, b in zip(lbase, lsh))
+    print(f"LIMBS {ndev} {int(ok)}")
+
 # BinAccumulator declares merge_is_add: merge_across must take the psum
 # fast path and still match a single-device pass bit for bit
 from jax.sharding import PartitionSpec as P
@@ -209,8 +242,10 @@ for row in xa:
     direct = acc.push(direct, row)
 print(f"BINACC {int(np.array_equal(got, np.asarray(acc.finalize(direct))))}")
 
-# permutation of shards: swap whole shard-sized row chunks; the integer
-# tiers must not notice (associative + commutative integer carries)
+# permutation of shards: swap whole shard-sized row chunks; the bitwise
+# tiers must not notice (associative + commutative integer carries);
+# exact2's finalized float re-folds its residual limb in the new order —
+# ulp-level tolerance, with bitwise-equal canonical integer limbs
 mesh8 = Mesh(np.asarray(jax.devices()), ("shards",))
 npad = 1024                                # 8 shards x 1 block of 128
 vp = jnp.asarray(rng.randn(npad, d).astype(np.float32))
@@ -225,14 +260,15 @@ for pol in ("exact", "exact2", "procrastinate"):
                             num_segments=s, policy=pol,
                             backend="shard_map", mesh=mesh8,
                             block_size=bs))
-    print(f"PERM {pol} {int(np.array_equal(a, b))}")
+    rel = float(np.abs(a - b).max()) / max(float(np.abs(a).max()), 1e-30)
+    print(f"PERM {pol} {int(np.array_equal(a, b))} {rel:.3e}")
 
 # auto-selection under an ambient multi-device mesh, bitwise vs blocked
 with mesh8:
     auto = np.asarray(R.reduce(vals, segment_ids=ids, num_segments=s,
-                               policy="exact2", block_size=bs))
+                               policy="exact", block_size=bs))
 base = np.asarray(R.reduce(vals, segment_ids=ids, num_segments=s,
-                           policy="exact2", backend="blocked",
+                           policy="exact", backend="blocked",
                            block_size=bs))
 print(f"AUTO {int(np.array_equal(auto, base))}")
 
@@ -248,8 +284,9 @@ print(f"MESH2D {int(np.array_equal(out2d, base2d))}")
 
 # the training route: make_train_step(grad_reduce="exact2",
 # grad_reduce_mesh=<8-dev mesh>) routes the microbatch-gradient mean
-# through shard_map and must reproduce the local-executor build bit for
-# bit (the integer tiers' executor-invariance, through a whole step)
+# through shard_map; the integer limbs are executor-invariant and the
+# residual limb holds ulp-level tolerance, so the mesh-built step must
+# track the local-executor build to float tolerance through a whole step
 from repro.configs import get_smoke_config
 from repro.models import init_params
 from repro.optim import adamw
@@ -264,9 +301,10 @@ batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32),
 p1, _, _ = jax.jit(make_train_step(cfg, grad_reduce_mesh=mesh8,
                                    **kw))(params, opt, batch)
 p0, _, _ = jax.jit(make_train_step(cfg, **kw))(params, opt, batch)
-same = all(np.array_equal(a, b)
-           for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p0)))
-print(f"TRAINSTEP {int(same)}")
+close = all(np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32),
+                        rtol=1e-5, atol=1e-6)
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p0)))
+print(f"TRAINSTEP {int(close)}")
 """
 
 
@@ -281,13 +319,22 @@ def test_multidevice_bitwise_invariance():
             (ln for ln in lines if ln[0] == "GRID")}
     assert len(grid) == 15
     for (pol, ndev), (bit, rel) in grid.items():
-        if pol in INT_POLICIES or ndev == 1:
+        if pol in BITWISE_POLICIES or ndev == 1:
             assert bit == 1, (pol, ndev)        # bitwise, any shard count
+        elif pol == "exact2":
+            # residual limb folds in device order: ulp-level, not bitwise
+            # (the integer limbs are checked bitwise by LIMBS below)
+            assert rel < 1e-6, (pol, ndev, rel)
         else:
             assert rel < 1e-5, (pol, ndev, rel)   # documented tolerance
-    perms = {p: int(bit) for tag, p, bit in
+    limbs = {int(nd): int(ok) for tag, nd, ok in
+             (ln for ln in lines if ln[0] == "LIMBS")}
+    assert limbs == {1: 1, 2: 1, 8: 1}
+    perms = {p: (int(bit), float(rel)) for tag, p, bit, rel in
              (ln for ln in lines if ln[0] == "PERM")}
-    assert perms == {p: 1 for p in INT_POLICIES}
+    for p in BITWISE_POLICIES:
+        assert perms[p][0] == 1, p
+    assert perms["exact2"][1] < 1e-6
     tags = [(ln[0], ln[1]) for ln in lines]
     assert ("AUTO", "1") in tags
     assert ("MESH2D", "1") in tags
