@@ -38,6 +38,36 @@ for _p in (str(REPO), str(REPO / "src")):
 #: files whose references we hold to the resolve-or-fail bar
 DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
 
+#: load-bearing public API the docs *must* keep naming (and that must
+#: keep importing): the contract surface of the three-limb exact path.
+#: A rename that forgets the docs — or drops the symbol — fails CI here.
+REQUIRED_SYMBOLS = [
+    "repro.core.intac.limb_split3",
+    "repro.core.intac.limb_add3",
+    "repro.core.intac.limb_merge3",
+    "repro.core.intac.limbs_resolve3",
+    "repro.core.intac.limbs_canonical",
+    "repro.core.intac.intac_psum3",
+    "repro.core.intac.Limb3State",
+    "repro.reduce.Limb3Accumulator",
+    "repro.reduce.collective_mean",
+    "repro.reduce.merge_carry_across",
+]
+
+
+def check_required_symbols() -> list:
+    """Every REQUIRED_SYMBOLS entry must import *and* be mentioned (by
+    its unqualified name) somewhere in the doc set."""
+    errors = []
+    docs_text = "\n".join(p.read_text() for p in DOC_FILES)
+    for ref in REQUIRED_SYMBOLS:
+        if not _symbol_resolves(ref):
+            errors.append(f"required symbol {ref!r} does not resolve")
+        if ref.rsplit(".", 1)[-1] not in docs_text:
+            errors.append(f"required symbol {ref!r} is not mentioned in "
+                          f"any doc file")
+    return errors
+
 _BACKTICK = re.compile(r"`([^`\n]+)`")
 _MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _PATHLIKE = re.compile(r"^[\w./-]+(?:\.(?:py|md|txt|yml|toml)|/)$")
@@ -111,6 +141,7 @@ def main() -> int:
     errors = []
     for f in DOC_FILES:
         errors.extend(check_file(f))
+    errors.extend(check_required_symbols())
     if errors:
         print(f"doc check: {len(errors)} dangling reference(s)")
         for e in errors:
