@@ -114,6 +114,7 @@ def main(argv=None) -> None:
         paper_tables.table6_reduce_policies(rows, smoke=True)
         paper_tables.table6b_large_n_resolution(rows, smoke=True)
         paper_tables.table7_shard_scaling(rows, smoke=True)
+        paper_tables.table9_fault_overhead(rows, smoke=True)
     else:
         paper_tables.table1_schedule(rows)
         paper_tables.table2_pis_registers(rows)
@@ -122,6 +123,7 @@ def main(argv=None) -> None:
         paper_tables.table6_reduce_policies(rows)
         paper_tables.table6b_large_n_resolution(rows)
         paper_tables.table7_shard_scaling(rows)
+        paper_tables.table9_fault_overhead(rows)
 
     print("name,value,derived")
     for name, val, derived in rows:

@@ -13,11 +13,23 @@ Design for the fault-tolerance story (multi-thousand-node deployments):
   * elastic:     restore() reads the *logical* (unsharded) tree and lets
                  jax.device_put re-shard — restarting on a smaller/larger
                  mesh (elastic scaling) is a re-shard, not a re-format;
+  * integrity:   every shard file carries a CRC32 sidecar (whole-file and
+                 per-leaf, over the compressed blobs); ``restore`` verifies
+                 both before a single byte is decoded, and every
+                 availability/corruption failure surfaces as a structured
+                 ``CheckpointError`` naming the step and path;
+  * recovery:    ``restore_latest_valid`` walks steps newest-first,
+                 retries transient read failures a bounded number of
+                 times, and falls back past corrupt/truncated checkpoints
+                 to the newest one that verifies;
   * retention:   keep the newest ``keep`` checkpoints, delete older ones.
 
-Format: msgpack map {path: {dtype, shape, raw(zstd, or zlib when
-zstandard is unavailable — restore sniffs the frame magic)}} + a small
-json manifest.  No orbax dependency — this is the substrate, built here.
+Format (v2): msgpack map {path: {dtype, shape, raw(zstd, or zlib when
+zstandard is unavailable — restore sniffs the frame magic)}} + a
+``.crc.json`` sidecar per shard + a small json manifest.  Sidecar-less
+(v1) checkpoints still restore — decode errors are caught either way;
+they just lose the cheap pre-decode verification.  No orbax dependency —
+this is the substrate, built here.
 """
 
 from __future__ import annotations
@@ -41,6 +53,37 @@ except ImportError:
 import zlib
 
 _ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+#: sidecar/manifest format with CRC32 integrity records
+FORMAT_VERSION = 2
+
+
+class CheckpointError(Exception):
+    """A checkpoint could not be read back faithfully.
+
+    Raised by ``restore`` for every availability or integrity failure —
+    missing/corrupt manifest, missing shard files, CRC mismatch,
+    truncated or undecodable blobs — always naming the step and path so
+    the caller (or the operator reading the traceback) knows exactly
+    which artifact is bad.  ``step`` and ``path`` are also carried as
+    attributes for programmatic handling (``restore_latest_valid`` uses
+    them to fall back to an older step).
+    """
+
+    def __init__(self, message: str, *, step: Optional[int] = None,
+                 path=None):
+        self.step = step
+        self.path = None if path is None else str(path)
+        where = ""
+        if step is not None:
+            where += f" step {step}"
+        if path is not None:
+            where += f" at {path}"
+        super().__init__(f"checkpoint{where}: {message}")
+
+
+def _crc(blob: bytes) -> int:
+    return zlib.crc32(blob) & 0xFFFFFFFF
 
 
 def _compress(raw: bytes) -> bytes:
@@ -93,12 +136,20 @@ def save(ckpt_dir: str, step: int, tree, *, host_id: int = 0,
             "dtype": str(arr.dtype), "shape": list(arr.shape),
             "data": _compress(arr.tobytes()),
         }
-    shard_file = tmp / f"shard_{host_id:05d}of{num_hosts:05d}.msgpack"
-    with open(shard_file, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
+    stem = f"shard_{host_id:05d}of{num_hosts:05d}"
+    blob = msgpack.packb(payload, use_bin_type=True)
+    with open(tmp / f"{stem}.msgpack", "wb") as f:
+        f.write(blob)
+    # integrity sidecar: whole-file CRC32 plus one per compressed leaf
+    # blob, so restore can verify before decoding a single byte and name
+    # the exact leaf a bit flip landed in
+    sidecar = {"format": FORMAT_VERSION, "file_crc32": _crc(blob),
+               "leaves": {k: _crc(v["data"]) for k, v in payload.items()}}
+    (tmp / f"{stem}.crc.json").write_text(json.dumps(sidecar))
 
     if host_id == 0:
         manifest = {"step": step, "num_hosts": num_hosts,
+                    "format": FORMAT_VERSION,
                     "time": time.time(), "extra": extra or {}}
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         # barrier point in a real multi-host run; single-host: rename now
@@ -132,13 +183,60 @@ def restore(ckpt_dir: str, step: int, like_tree, *,
 
     ``shardings``: optional pytree of NamedSharding — leaves are placed
     directly onto the (possibly different — elastic restart) mesh.
+
+    Integrity: when a ``.crc.json`` sidecar is present (format v2), the
+    whole shard file and every compressed leaf blob are CRC32-verified
+    before decoding.  Every availability/corruption failure — absent or
+    corrupt manifest, no shard files, CRC mismatch, truncated msgpack,
+    undecodable blob — raises ``CheckpointError`` naming the step and
+    path.  A leaf present in ``like_tree`` but absent from the snapshot
+    still raises ``KeyError`` (a structure mismatch, not corruption).
     """
     d = Path(ckpt_dir) / f"step_{step:08d}"
-    manifest = json.loads((d / "manifest.json").read_text())
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+    except FileNotFoundError as e:
+        raise CheckpointError("manifest.json is missing (no such step, or "
+                              "a partially-written snapshot)",
+                              step=step, path=d) from e
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointError(f"manifest.json is corrupt ({e})",
+                              step=step, path=d) from e
+    shard_files = sorted(d.glob("shard_*.msgpack"))
+    if not shard_files:
+        raise CheckpointError("no shard files", step=step, path=d)
     raw = {}
-    for shard_file in sorted(d.glob("shard_*.msgpack")):
-        with open(shard_file, "rb") as f:
-            raw.update(msgpack.unpackb(f.read(), raw=False))
+    for shard_file in shard_files:
+        blob = shard_file.read_bytes()
+        sidecar_file = shard_file.with_name(
+            shard_file.name[: -len(".msgpack")] + ".crc.json")
+        sidecar = None
+        if sidecar_file.exists():             # v1 snapshots have none
+            try:
+                sidecar = json.loads(sidecar_file.read_text())
+            except (json.JSONDecodeError, UnicodeDecodeError) as e:
+                raise CheckpointError(f"integrity sidecar is corrupt ({e})",
+                                      step=step, path=sidecar_file) from e
+            got = _crc(blob)
+            if got != sidecar["file_crc32"]:
+                raise CheckpointError(
+                    f"shard file CRC32 {got:#010x} does not match the "
+                    f"recorded {sidecar['file_crc32']:#010x} (bit flip or "
+                    f"truncation)", step=step, path=shard_file)
+        try:
+            part = msgpack.unpackb(blob, raw=False)
+        except Exception as e:
+            raise CheckpointError(f"shard is truncated or undecodable "
+                                  f"({type(e).__name__}: {e})",
+                                  step=step, path=shard_file) from e
+        if sidecar is not None:
+            for key, ent in part.items():
+                want = sidecar["leaves"].get(key)
+                if want is not None and _crc(ent["data"]) != want:
+                    raise CheckpointError(
+                        f"leaf {key!r} CRC32 mismatch (bit flip in the "
+                        f"compressed blob)", step=step, path=shard_file)
+        raw.update(part)
 
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(
         like_tree)
@@ -151,13 +249,64 @@ def restore(ckpt_dir: str, step: int, like_tree, *,
         if key not in raw:
             raise KeyError(f"checkpoint missing leaf {key}")
         ent = raw[key]
-        arr = np.frombuffer(_decompress(ent["data"]),
-                            dtype=ent["dtype"]).reshape(ent["shape"])
+        try:
+            buf = _decompress(ent["data"])
+        except ImportError:
+            raise                      # zstd frame, zstandard missing
+        except Exception as e:
+            raise CheckpointError(f"leaf {key!r} failed to decompress "
+                                  f"({type(e).__name__}: {e})",
+                                  step=step, path=d) from e
+        arr = np.frombuffer(buf, dtype=ent["dtype"]).reshape(ent["shape"])
         if shard_flat is not None:
             out.append(jax.device_put(arr, shard_flat[i]))
         else:
             out.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+def restore_latest_valid(ckpt_dir: str, like_tree, *, shardings=None,
+                         retries: int = 2):
+    """Restore the newest checkpoint that verifies, falling back past
+    corrupt ones.
+
+    Walks the available steps newest-first.  A transient read failure
+    (``OSError``) is retried up to ``retries`` times before the step is
+    written off; a ``CheckpointError`` (CRC mismatch, truncation, missing
+    manifest) skips straight to the next-older step.  Returns
+    ``(tree, manifest, step)``, or ``None`` when the directory holds no
+    snapshots at all; raises ``CheckpointError`` when snapshots exist but
+    none verifies (restoring silently from nothing would be worse than
+    crashing).
+    """
+    d = Path(ckpt_dir)
+    steps: list = []
+    if d.exists():
+        steps = sorted((int(p.name.split("_")[1]) for p in d.iterdir()
+                        if p.is_dir() and p.name.startswith("step_")
+                        and not p.name.endswith(".tmp")), reverse=True)
+    if not steps:
+        return None
+    failures = []
+    for step in steps:
+        attempt = 0
+        while True:
+            try:
+                tree, manifest = restore(ckpt_dir, step, like_tree,
+                                         shardings=shardings)
+                return tree, manifest, step
+            except CheckpointError as e:
+                failures.append(f"step {step}: {e}")
+                break
+            except OSError as e:       # transient read failure: retry
+                attempt += 1
+                if attempt > retries:
+                    failures.append(f"step {step}: {type(e).__name__}: {e}")
+                    break
+                time.sleep(0.05 * attempt)
+    raise CheckpointError(
+        "no valid checkpoint among steps "
+        f"{steps}; " + "; ".join(failures), path=d)
 
 
 def save_every(step: int, interval: int) -> bool:

@@ -108,6 +108,25 @@ def quantize(x: jnp.ndarray, scale) -> jnp.ndarray:
     return jnp.round(x * scale).astype(jnp.int32)
 
 
+def wrap_add(a: jnp.ndarray, b: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                      jnp.ndarray]:
+    """int32 add plus an exact wraparound predicate: (a + b, wrapped).
+
+    Two's-complement overflow happens iff both operands share a sign and
+    the sum does not: ``((a ^ s) & (b ^ s)) < 0`` checks exactly that with
+    three cheap bitwise ops — jittable, branch-free, and free to fuse into
+    the accumulation it guards.  This is the guard-rail primitive of the
+    integer tiers: every carry update that could saturate threads its
+    wrap flags into an overflow counter, so a result whose canonical
+    integer total wrapped is *detected* (``ReduceStatus.saturated``)
+    instead of silently wrong.
+    """
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    s = a + b
+    return s, ((a ^ s) & (b ^ s)) < 0
+
+
 def descale(xf: jnp.ndarray, scale) -> jnp.ndarray:
     """Divide an f32 value by ``scale``; exact two-step ldexp for powers
     of two.
@@ -245,11 +264,16 @@ def limb_merge(a: LimbState, b: LimbState) -> LimbState:
 # rounded to a coarser grid, the difference is a short-mantissa number and
 # the subtraction is exact by Sterbenz), so (hi, lo, r) represents x with
 # no information loss at all.  The integer limbs keep their associative /
-# bitwise-order-independent contract; the residual limb accumulates
-# compensated-style (a two_sum-carried f32 pair), which pins its error at
-# the ~f64 level — tolerance, not bits, under re-ordering.  ``finalize``
-# is one carry-resolve + compensated combine, within 1 ulp of the f64
-# reference for arbitrary f32 streams.
+# bitwise-order-independent contract; in the *streaming* accumulator the
+# residual limb accumulates compensated-style (a two_sum-carried f32
+# pair), which pins its error at the ~f64 level — tolerance, not bits,
+# under re-ordering.  The block-schedule tier (``exact2``) goes further:
+# per-element residuals split into integer digit bins
+# (``RES_BIN_BITS``/``RES_NUM_BINS``) that accumulate associatively, so
+# its finalize (``limbs_resolve3_binned``) is bitwise order/topology
+# independent outright.  Either finalize is one carry-resolve +
+# compensated combine, within 1 ulp of the f64 reference for arbitrary
+# f32 streams.
 
 
 class Limb3State(NamedTuple):
@@ -257,18 +281,25 @@ class Limb3State(NamedTuple):
     plus the compensated f32 residual pair (res, comp).
 
     value represented = (hi * 2^15 + lo) / scale + res + comp.
+
+    ``ovf`` is the saturation guard rail: an int32 count of integer-limb
+    wraparound events (``wrap_add``).  Nonzero means some limb overflowed
+    and the canonical integer total is wrong — the state is *detectably*
+    saturated rather than silently corrupt.  ``None`` (the pre-guard-rail
+    default, kept for 5-field constructors) disables tracking.
     """
     hi: jnp.ndarray    # int32
     lo: jnp.ndarray    # int32
     res: jnp.ndarray   # f32: exactly-captured quantization residuals
     comp: jnp.ndarray  # f32: two_sum compensation of the residual limb
     scale: jnp.ndarray
+    ovf: Optional[jnp.ndarray] = None   # int32 wrap-event count, or None
 
 
 def limb3_init(shape, scale) -> Limb3State:
     z = jnp.zeros(shape, jnp.int32)
     r = jnp.zeros(shape, jnp.float32)
-    return Limb3State(z, z, r, r, jnp.asarray(scale, jnp.float32))
+    return Limb3State(z, z, r, r, jnp.asarray(scale, jnp.float32), z)
 
 
 def limb_split3(x: jnp.ndarray, scale) -> Tuple[jnp.ndarray, jnp.ndarray,
@@ -291,21 +322,39 @@ def limb_add3(state: Limb3State, x: jnp.ndarray) -> Limb3State:
     """Accumulate one fp32 operand losslessly (3:2 compressor + residual).
 
     Integer limbs add associatively; the residual folds through ``two_sum``
-    so its rounding error is carried, not dropped.
+    so its rounding error is carried, not dropped.  Limb adds run through
+    ``wrap_add``: a wrap at the int32 edge increments ``ovf`` in the same
+    fused update, so saturation is detected exactly when the canonical
+    integer total would be wrong (and never before — a carry landing *at*
+    ``2^31 - 1`` is still correct and raises no flag).
     """
     hi, lo, r = limb_split3(x, state.scale)
+    nhi, w1 = wrap_add(state.hi, hi)
+    nlo, w2 = wrap_add(state.lo, lo)
     s, e = two_sum(state.res, r)
-    return Limb3State(state.hi + hi, state.lo + lo, s, state.comp + e,
-                      state.scale)
+    ovf = state.ovf
+    if ovf is not None:
+        ovf = ovf + w1.astype(jnp.int32) + w2.astype(jnp.int32)
+    return Limb3State(nhi, nlo, s, state.comp + e, state.scale, ovf)
 
 
 def limb_merge3(a: Limb3State, b: Limb3State) -> Limb3State:
     """Merge two three-limb accumulators: integer limbs add exactly (any
     order, same bits); the residual pair merges through ``two_sum`` —
-    deterministic for a pinned merge order, ulp-level drift otherwise."""
+    deterministic for a pinned merge order, ulp-level drift otherwise.
+    Wrap flags from the merge adds pool into ``ovf`` alongside both
+    sides' prior counts, so saturation anywhere in a merge tree survives
+    to ``finalize``."""
+    nhi, w1 = wrap_add(a.hi, b.hi)
+    nlo, w2 = wrap_add(a.lo, b.lo)
     s, e = two_sum(a.res, b.res)
-    return Limb3State(a.hi + b.hi, a.lo + b.lo, s, a.comp + b.comp + e,
-                      a.scale)
+    ovf = None
+    if a.ovf is not None or b.ovf is not None:
+        za = jnp.zeros_like(nhi)
+        ovf = ((a.ovf if a.ovf is not None else za)
+               + (b.ovf if b.ovf is not None else za)
+               + w1.astype(jnp.int32) + w2.astype(jnp.int32))
+    return Limb3State(nhi, nlo, s, a.comp + b.comp + e, a.scale, ovf)
 
 
 def limbs_resolve3(hi: jnp.ndarray, lo: jnp.ndarray, res: jnp.ndarray,
@@ -373,6 +422,19 @@ NUM_BINS = 6
 #: per-bin int32 headroom: max terms accumulated with no overflow
 BIN_MAX_TERMS = 1 << (31 - BIN_BITS - 1)
 
+#: the residual superaccumulator of the exact2 tier: the per-element
+#: quantization residual (|r * scale| <= 1/2 — below one quantum) splits
+#: into RES_NUM_BINS digits of RES_BIN_BITS bits anchored at the quantum
+#: (e_ref = 0), a 49-bit window below the scale's grid.  Digits are <=
+#: 2^(RES_BIN_BITS - 1) = 64 per element, so a 512-row block contributes
+#: <= 2^15 per bin and 2^15 blocks stay within int32 — the same 2x-margin
+#: headroom ledger as the integer limbs.  Truncation below the window is
+#: <= 2^-50 of a quantum per element: with the exact2 scale (2^21 below
+#: max|x|) that is max|x| * 2^-71 per element — far below 1 ulp of any
+#: sum of up to 2^24 terms.
+RES_BIN_BITS = 7
+RES_NUM_BINS = 7
+
 
 def bin_ref_exponent(max_abs) -> jnp.ndarray:
     """Window anchor: e with max_abs * 2^-e in [0.5, 1); 0 for all-zero.
@@ -385,20 +447,23 @@ def bin_ref_exponent(max_abs) -> jnp.ndarray:
     return jnp.frexp(m)[1].astype(jnp.int32)
 
 
-def bin_split(x: jnp.ndarray, e_ref) -> jnp.ndarray:
-    """Split f32 values into (NUM_BINS, *x.shape) int32 exponent-bin digits.
+def bin_split(x: jnp.ndarray, e_ref, *, bits: int = BIN_BITS,
+              num: int = NUM_BINS) -> jnp.ndarray:
+    """Split f32 values into (num, *x.shape) int32 exponent-bin digits.
 
-    x == sum_k digits[k] * 2^(e_ref - (k+1)*BIN_BITS) exactly for values
+    x == sum_k digits[k] * 2^(e_ref - (k+1)*bits) exactly for values
     within 2^24 of the window anchor; the residual below the window is
     dropped (see module comment).  Each extraction step is exact float
     arithmetic: s = v * 2^W is a power-of-two scaling, round(s) is an
     integer below 2^W, and s - round(s) is a multiple of ulp(s) — the
-    classic Dekker split.
+    classic Dekker split.  Defaults are the procrastinate tier's window;
+    the exact2 residual superaccumulator uses ``bits=RES_BIN_BITS,
+    num=RES_NUM_BINS`` anchored at its quantum.
     """
     v = _ldexp2(x.astype(jnp.float32), -jnp.asarray(e_ref, jnp.int32))
-    radix = jnp.float32(1 << BIN_BITS)
+    radix = jnp.float32(1 << bits)
     digits = []
-    for _ in range(NUM_BINS):
+    for _ in range(num):
         s = v * radix
         d = jnp.round(s)
         v = s - d                         # exact: both multiples of ulp(s)
@@ -406,32 +471,81 @@ def bin_split(x: jnp.ndarray, e_ref) -> jnp.ndarray:
     return jnp.stack(digits)
 
 
-def bin_combine(bins: jnp.ndarray, e_ref) -> jnp.ndarray:
-    """The deferred final addition: (NUM_BINS, ...) int32 bins -> f32.
+def _bin_carry_resolve(bins: jnp.ndarray, bits: int) -> list:
+    """Canonicalize (num, ...) int32 digit bins in the integer domain.
 
-    Integer carry-resolve first (each bin's digit beyond +-2^(W-1) carries
-    into the next-more-significant bin), which makes the representation a
-    canonical function of the accumulated total — so the f32 result is
-    bitwise independent of how the stream was blocked or ordered.  The
-    float combine then runs least-significant-first through the
-    compensated two-sum, so the one rounding that reaches the caller is
-    the final one.
+    Each bin's digit beyond +-2^(bits-1) carries into the next-more-
+    significant bin, leaving a representation that is a pure function of
+    the accumulated total — the bin analogue of ``limbs_canonical``, and
+    the reason binned results are bitwise blocking/order-independent.
+    """
+    num = bins.shape[0]
+    resolved = [bins[k] for k in range(num)]
+    half = 1 << (bits - 1)
+    for k in range(num - 1, 0, -1):
+        c = jnp.right_shift(resolved[k] + half, bits)
+        resolved[k] = resolved[k] - (c << bits)
+        resolved[k - 1] = resolved[k - 1] + c
+    return resolved
+
+
+def bin_combine(bins: jnp.ndarray, e_ref, *,
+                bits: int = BIN_BITS) -> jnp.ndarray:
+    """The deferred final addition: (num, ...) int32 bins -> f32.
+
+    Integer carry-resolve first (``_bin_carry_resolve``), which makes the
+    representation a canonical function of the accumulated total — so the
+    f32 result is bitwise independent of how the stream was blocked or
+    ordered.  The float combine then runs least-significant-first through
+    the compensated two-sum, so the one rounding that reaches the caller
+    is the final one.
     """
     e_ref = jnp.asarray(e_ref, jnp.int32)
-    resolved = [bins[k] for k in range(NUM_BINS)]
-    half = 1 << (BIN_BITS - 1)
-    for k in range(NUM_BINS - 1, 0, -1):
-        c = jnp.right_shift(resolved[k] + half, BIN_BITS)
-        resolved[k] = resolved[k] - (c << BIN_BITS)
-        resolved[k - 1] = resolved[k - 1] + c
+    num = bins.shape[0]
+    resolved = _bin_carry_resolve(bins, bits)
     acc = jnp.zeros(bins.shape[1:], jnp.float32)
     comp = jnp.zeros(bins.shape[1:], jnp.float32)
-    for k in range(NUM_BINS - 1, -1, -1):
+    for k in range(num - 1, -1, -1):
         term = _ldexp2(resolved[k].astype(jnp.float32),
-                       e_ref - (k + 1) * BIN_BITS)
+                       e_ref - (k + 1) * bits)
         acc, e = two_sum(acc, term)
         comp = comp + e
     return acc + comp
+
+
+def limbs_resolve3_binned(hi: jnp.ndarray, lo: jnp.ndarray,
+                          rbins: jnp.ndarray, scale, *,
+                          bits: int = RES_BIN_BITS) -> jnp.ndarray:
+    """Resolve (hi, lo) integer limbs plus a binned residual
+    superaccumulator — the all-integer three-limb final addition.
+
+    ``rbins`` is (num, ...) int32: sums of per-element residual digits
+    (``bin_split(r * scale, 0, bits=RES_BIN_BITS, num=RES_NUM_BINS)``),
+    each digit worth ``2^(-(k+1)*bits) / scale``.  Everything entering
+    the float combine is a canonical integer (``limbs_canonical`` for the
+    limbs, ``_bin_carry_resolve`` for the bins) — a pure function of the
+    accumulated integer totals — so the finalized float is **bitwise**
+    independent of blocking, ordering, backend, shard count, and mesh
+    shape, with no order-pinned float fold left anywhere.  The combine
+    runs least-significant-first (residual bins, then lo, then the split
+    hi) through compensated two-sums: one rounding reaches the caller.
+    """
+    hi, lo = limbs_canonical(hi, lo)
+    num = rbins.shape[0]
+    resolved = _bin_carry_resolve(rbins, bits)
+    # hi may need up to 31 bits: split into two exactly-convertible pieces
+    _HSPLIT = 14
+    hih = jnp.right_shift(hi, _HSPLIT)               # |hih| <= 2^17
+    hil = jnp.bitwise_and(hi, (1 << _HSPLIT) - 1)    # in [0, 2^14)
+    acc = jnp.zeros(hi.shape, jnp.float32)
+    cmp_ = jnp.zeros(hi.shape, jnp.float32)
+    terms = [(resolved[k], -(k + 1) * bits) for k in range(num - 1, -1, -1)]
+    terms += [(lo, 0), (hil, LIMB_SHIFT), (hih, LIMB_SHIFT + _HSPLIT)]
+    for quanta, shift in terms:
+        term = descale(_ldexp2(quanta.astype(jnp.float32), shift), scale)
+        acc, e = two_sum(acc, term)
+        cmp_ = cmp_ + e
+    return acc + cmp_
 
 
 # ---------------------------------------------------------------------------
@@ -480,23 +594,30 @@ def limb3_merge_across(hi: jnp.ndarray, lo: jnp.ndarray, res: jnp.ndarray,
 
     Integer limbs reduce with one associative int32 ``psum`` each — any
     reduction topology, same bits, at any device count.  The residual
-    pair all-gathers and folds strictly in device order through
-    ``two_sum`` with pooled compensation, so the combine schedule is a
-    pure function of the mesh — deterministic, ulp-level tolerance
-    rather than bits.  Every layer that merges three-limb state across
+    pair reduces through a small superaccumulator (Neal, arXiv
+    1505.05571): every device splits res and comp into exponent-indexed
+    integer digits of a window anchored at the global (pmax-shared)
+    residual maximum, the digit bins ``psum`` in the exact integer
+    domain, and one carry-resolve + compensated combine rebuilds a float
+    residual.  Both the anchor and the integer bin sums are pure
+    functions of the *global* per-device residuals — no device-order
+    fold remains, so the merged state (and everything finalized from it)
+    is bitwise identical at any device count, mesh shape, or device
+    permutation.  Every layer that merges three-limb state across
     devices (the exact2 policy, ``Limb3Accumulator``, ``intac_psum3``)
     delegates here so the semantics cannot drift apart.
     """
     axes = tuple(axis_names)
     hi = jax.lax.psum(hi, axes)
     lo = jax.lax.psum(lo, axes)
-    gr = jax.lax.all_gather(res, axes, axis=0)
-    gc = jax.lax.all_gather(comp, axes, axis=0)
-    res, comp = gr[0], gc[0]
-    for k in range(1, gr.shape[0]):
-        res, e = two_sum(res, gr[k])
-        comp = comp + gc[k] + e
-    return hi, lo, res, comp
+    m = jnp.maximum(jnp.max(jnp.abs(res)), jnp.max(jnp.abs(comp)))
+    e_ref = bin_ref_exponent(jax.lax.pmax(m, axes))
+    digits = (bin_split(res, e_ref, bits=RES_BIN_BITS, num=RES_NUM_BINS)
+              + bin_split(comp, e_ref, bits=RES_BIN_BITS,
+                          num=RES_NUM_BINS))
+    digits = jax.lax.psum(digits, axes)
+    res = bin_combine(digits, e_ref, bits=RES_BIN_BITS)
+    return hi, lo, res, jnp.zeros_like(res)
 
 
 def intac_psum3(x: jnp.ndarray, axis_name, *, qbits: int = 30) -> jnp.ndarray:
@@ -505,10 +626,13 @@ def intac_psum3(x: jnp.ndarray, axis_name, *, qbits: int = 30) -> jnp.ndarray:
 
     The integer limbs follow ``intac_psum2`` bit for bit (one associative
     int32 psum per limb — any reduction topology, same bits); the residual
-    limb all-gathers and folds strictly in device order through ``two_sum``
-    (``limb3_merge_across``), so the combine schedule is a pure function
-    of the mesh.  The finalized sum is within 1 ulp of the f64 reference
-    for arbitrary f32 inputs — the residual makes "exact" hold off the
+    limb reduces through the binned superaccumulator of
+    ``limb3_merge_across`` — per-element digit splits into integer bins
+    that psum associatively, anchored at a pmax-shared window.  Because
+    the per-element digits depend only on each element's value and the
+    global anchor, the finalized sum is **bitwise identical at any device
+    count or mesh shape**, and within 1 ulp of the f64 reference for
+    arbitrary f32 inputs — the residual makes "exact" hold off the
     dyadic grid too.
     """
     gmax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)

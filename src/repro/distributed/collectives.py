@@ -27,6 +27,13 @@ tricks:
   3. **Hierarchical reduction** — 'data' (in-pod ICI) first, then 'pod'
      (cross-pod DCI), matching the physical topology.
 
+``make_elastic_train_step`` is the topology-elastic variant: gradients
+and loss cross the device boundary only through
+``repro.reduce.elastic_reduce_mean`` under a bitwise policy, and the
+microbatch grid is pinned to the global stream — so the same global
+batch produces bit-identical params on any mesh shape or device count
+(the resume-anywhere half of docs/robustness.md).
+
 The pjit path (train/steps.py) remains the default for the dry-run; this
 step is benchmarked against it in benchmarks/ and exercised by tests.
 """
@@ -122,6 +129,90 @@ def make_shardmap_train_step(cfg: ModelConfig, mesh, *, lr_fn: Callable,
     return shard_map(step, mesh=mesh,
                      in_specs=(pspec, pspec, pspec, bspec),
                      out_specs=(pspec, pspec, pspec, pspec),
+                     check_rep=False)
+
+
+def make_elastic_train_step(cfg: ModelConfig, mesh, *, lr_fn: Callable,
+                            microbatch_size: int = 1,
+                            moe_impl: str = "dense",
+                            remat: bool = False,
+                            clip_norm: float = 1.0,
+                            policy: str = "exact2",
+                            block_size: int = 512):
+    """The topology-elastic training step: same params + same global batch
+    => bitwise-identical new params and loss on *any* mesh.
+
+    The difference from ``make_shardmap_train_step`` is that every
+    quantity crossing the device boundary goes through
+    ``repro.reduce.elastic_reduce_mean`` under a bitwise policy (exact2
+    by default — all-int32 carry, residual included), and the unit of
+    work is pinned to the *global* stream, not the topology:
+
+      * ``microbatch_size`` is a fixed global constant.  shard_map splits
+        the batch contiguously, each shard scans its rows in
+        ``microbatch_size`` slices, so the set of microbatch gradients
+        {rows [k*mb, (k+1)*mb)} is identical however many shards exist —
+        only their assignment to devices changes.
+      * the gradient mean and the loss mean are elastic reductions over
+        that global microbatch stack: quantization grid shared by pmax,
+        partition-invariant integer carries, one associative psum per
+        component.  Bin-packing the same items differently cannot change
+        a single bit.
+
+    Combined with checkpointing this is the elastic-resume guarantee
+    (docs/robustness.md): train on 2 devices, checkpoint, resume on 8 —
+    the loss curve continues bit-for-bit (proven in tests/test_faults.py).
+
+    Requires the per-shard row count (batch / n_devices) to be a
+    multiple of ``microbatch_size``.
+
+    state = (params, opt_state); returns (params, opt_state, metrics).
+    """
+    axes = tuple(mesh.axis_names)
+
+    def step(params, opt_state, batch):
+        def grad_fn(p, mb):
+            (loss, metrics), g = jax.value_and_grad(
+                lambda pp: loss_fn(pp, cfg, mb, moe_impl=moe_impl,
+                                   remat=remat), has_aux=True)(p)
+            return g, loss
+
+        rows = jax.tree.leaves(batch)[0].shape[0]       # per-shard, static
+        if rows % microbatch_size:
+            raise ValueError(
+                f"elastic step: per-shard batch of {rows} rows is not a "
+                f"multiple of microbatch_size={microbatch_size}; the "
+                f"global microbatch grid must tile every shard")
+        m_local = rows // microbatch_size
+        mbs = jax.tree.map(
+            lambda x: x.reshape((m_local, microbatch_size) + x.shape[1:]),
+            batch)
+
+        def scan_body(_, mb):
+            g, loss = grad_fn(params, mb)
+            return None, (g, loss)
+
+        _, (gstack, losses) = jax.lax.scan(scan_body, None, mbs)
+        # one elastic mean per leaf over the global microbatch stack;
+        # the loss is the same reduction (NOT a pmean — its combine
+        # order would follow the topology)
+        grads = jax.tree.map(
+            lambda gs: _reduce.elastic_reduce_mean(
+                gs, axes, policy=policy, block_size=block_size), gstack)
+        loss = _reduce.elastic_reduce_mean(losses, axes, policy=policy,
+                                           block_size=block_size)
+
+        lr = lr_fn(opt_state.count + 1)   # count is 0-based
+        params, opt_state, gnorm = adamw.update(
+            grads, opt_state, params, lr=lr, clip_norm=clip_norm)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm,
+                                   "lr": lr}
+
+    pspec = P()           # params replicated (pure DP)
+    bspec = P(axes if len(axes) > 1 else axes[0])
+    return shard_map(step, mesh=mesh,
+                     in_specs=(pspec, pspec, bspec),
+                     out_specs=(pspec, pspec, pspec),
                      check_rep=False)
 
 

@@ -17,8 +17,8 @@ There is exactly ONE kernel body for the block schedule:
 ``_segsum_policy_kernel`` executes ``policy.contrib`` + ``policy.update``
 — the same pure jnp ops the ref/blocked backends thread — against the
 carry refs, so the cross-backend bitwise contract holds for every policy
-(fast / compensated f32 carries, exact single-limb, exact2 three-limb
-with its residual channel, procrastinate bins) by construction rather
+(fast / compensated f32 carries, exact single-limb, exact2 limbs +
+residual-digit planes, procrastinate bins) by construction rather
 than by duplicated code.
 
 VMEM budget per step: B*D (values) + B (ids) + carry_len*S*D floats —
@@ -59,7 +59,8 @@ def _segsum_policy_kernel(ids_ref, vals_ref, *out_refs, num_segments: int,
         jnp.int32, (1, num_segments), 1) + seg_offset
     onehot = ids == labels                          # (B, S) bool
     # state-1 pairing of the whole tile at once, on the MXU (the policy
-    # owns the dot(s): exact2 runs one int32 + one f32 dot per block):
+    # owns the dot(s): exact2 runs one int32 dot per block over its
+    # quantized + residual-digit planes):
     contrib = policy.contrib(onehot, vals)
     carry = policy.update(tuple(r[...] for r in out_refs), contrib)
     for r, c in zip(out_refs, carry):

@@ -96,12 +96,16 @@ def main(argv=None):
 
     start = 0
     if args.ckpt_dir:
-        latest = ckpt.latest_step(args.ckpt_dir)
-        if latest is not None:
-            state = {"params": params, "opt": opt_state}
-            if residuals is not None:
-                state["residuals"] = residuals
-            state, manifest = ckpt.restore(args.ckpt_dir, latest, state)
+        state = {"params": params, "opt": opt_state}
+        if residuals is not None:
+            state["residuals"] = residuals
+        # newest *valid* snapshot: a crash mid-save leaves a .tmp dir (no
+        # manifest) and a flipped bit fails the CRC sidecar — both fall
+        # back to the previous verified step instead of crashing or
+        # silently resuming from garbage
+        restored = ckpt.restore_latest_valid(args.ckpt_dir, state)
+        if restored is not None:
+            state, manifest, latest = restored
             params, opt_state = state["params"], state["opt"]
             residuals = state.get("residuals", residuals)
             start = manifest["extra"]["next_step"]

@@ -7,17 +7,17 @@ first-class knobs:
 
   * **policy** (accuracy): ``fast`` (f32 fixed pairing tree),
     ``compensated`` (Kahan/two-sum), ``exact`` (INTAC single-limb int32),
-    ``exact2`` (three-limb carry-save: full resolution at any N and <=1
-    ulp of the f64 reference for arbitrary f32 via the residual limb),
-    and ``procrastinate`` (exponent-indexed bins — <=1 ulp for arbitrary
-    f32 absent catastrophic cancellation)
+    ``exact2`` (integer carry-save limbs + residual-digit superaccumulator:
+    full resolution at any N, <=1 ulp of the f64 reference for arbitrary
+    f32, all-int32 carry), and ``procrastinate`` (exponent-indexed bins —
+    <=1 ulp for arbitrary f32 absent catastrophic cancellation)
     — ``policy.py``, extensible via ``@register_policy``.
   * **backend** (executor): ``ref`` / ``blocked`` / ``pallas`` /
     ``shard_map`` (multi-device) — all run the same block schedule so
-    results match bitwise per policy; integer carry state (all of
-    exact/procrastinate, exact2's int32 limbs) additionally matches
-    bitwise at any shard count — ``backends.py``, extensible via
-    ``@register_backend``.
+    results match bitwise per policy; all-integer carry state (every
+    component of exact / exact2 / procrastinate) additionally matches
+    bitwise at any shard count, mesh shape, and device permutation —
+    ``backends.py``, extensible via ``@register_backend``.
 
 Entry points:
   ``reduce(values, segment_ids=..., num_segments=..., op=..., ...)``
@@ -27,7 +27,14 @@ Entry points:
       juggler), KahanAccumulator, LimbAccumulator (INTAC), and
       FlashAccumulator (online softmax) compose with lax.scan and trees.
   ``collective_mean`` (``collective.py``)
-      the same policy knob for cross-device gradient means.
+      the same policy knob for cross-device gradient means;
+      ``elastic_reduce_mean`` for the topology-elastic (resume-anywhere)
+      global mean.
+  ``ReduceStatus`` (``api.py``)
+      opt-in guard rails — ``reduce(..., with_status=True)`` reports
+      NaN/Inf payloads, int32 carry saturation, degradation, and the
+      kept-row count; ``on_overflow="degrade"`` re-plans instead of
+      rejecting (see docs/robustness.md).
   ``OUT_OF_RANGE_LABEL``
       the repo-wide padding sentinel: rows so labeled drop out of every
       sum and count, on every backend.
@@ -39,13 +46,14 @@ from .accumulator import (Accumulator, BinAccumulator,  # noqa: F401
                           TreeAccumulator, accumulate_microbatch_grads,
                           merge_across, merge_tree,
                           reduce_microbatch_grads, scan_accumulate)
-from .api import ReduceSpec, reduce  # noqa: F401
+from .api import ReduceSpec, ReduceStatus, reduce  # noqa: F401
 from .backends import (BACKENDS, Backend, OUT_OF_RANGE_LABEL,  # noqa: F401
                        ambient_mesh, default_mesh, get_backend,
                        mask_out_of_range, register_backend, select_backend,
                        select_local_backend)
 from .collective import (COLLECTIVE_POLICIES, collective_mean,  # noqa: F401
-                         collective_mean_tree, merge_carry_across)
+                         collective_mean_tree, elastic_reduce_mean,
+                         merge_carry_across)
 from .policy import (POLICIES, Policy, get_policy,  # noqa: F401
                      register_policy, two_sum)
 
@@ -62,7 +70,7 @@ class _CallableModule(_sys.modules[__name__].__class__):
 _sys.modules[__name__].__class__ = _CallableModule
 
 __all__ = [
-    "reduce", "ReduceSpec", "OUT_OF_RANGE_LABEL",
+    "reduce", "ReduceSpec", "ReduceStatus", "OUT_OF_RANGE_LABEL",
     "Policy", "POLICIES", "register_policy", "get_policy", "two_sum",
     "Backend", "BACKENDS", "register_backend", "get_backend",
     "select_backend", "select_local_backend", "mask_out_of_range",
@@ -73,5 +81,5 @@ __all__ = [
     "scan_accumulate", "merge_tree", "merge_across",
     "accumulate_microbatch_grads", "reduce_microbatch_grads",
     "collective_mean", "collective_mean_tree", "COLLECTIVE_POLICIES",
-    "merge_carry_across",
+    "merge_carry_across", "elastic_reduce_mean",
 ]

@@ -202,11 +202,15 @@ class Limb3Accumulator:
         """Cross-device merge (inside shard_map), taken by the module
         ``merge_across`` in place of its generic paths: the one shared
         three-limb lowering (``core.intac.limb3_merge_across`` — int
-        limbs psum, residual pair folds in device order); the shared
-        scale leaf passes through untouched."""
+        limbs psum, residual pair re-binned as exponent-indexed digits
+        and psum'd); the shared scale leaf passes through untouched, and
+        the wrap-event count (overflow guard rail) psums like any other
+        integer component."""
         hi, lo, res, comp = intac.limb3_merge_across(
             state.hi, state.lo, state.res, state.comp, axis_names)
-        return intac.Limb3State(hi, lo, res, comp, state.scale)
+        ovf = (None if state.ovf is None
+               else jax.lax.psum(state.ovf, tuple(axis_names)))
+        return intac.Limb3State(hi, lo, res, comp, state.scale, ovf)
 
     def finalize(self, state) -> jnp.ndarray:
         return intac.limb3_finalize(state)

@@ -23,11 +23,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..core import intac
 from .backends import (OUT_OF_RANGE_LABEL, ambient_mesh, default_mesh,
                        get_backend, mask_out_of_range, select_backend)
 from .policy import get_policy
@@ -66,11 +67,50 @@ class ReduceSpec:
         return dataclasses.replace(self, **kw)
 
 
+class ReduceStatus(NamedTuple):
+    """Guard-rail flags for one reduction, returned by
+    ``reduce(..., with_status=True)``.
+
+    All fields are scalar jax arrays (jit-friendly; force with ``bool()``/
+    ``int()`` only outside traced code):
+
+    * ``nonfinite`` — True iff any *kept* row (in-range segment label)
+      carried a NaN/Inf payload.  Sentinel-dropped rows are zeroed before
+      any tier sees them, so their payloads can never poison a result —
+      and never trip this flag.
+    * ``saturated`` — True iff the policy's integer carry wrapped (int32
+      limb saturation, procrastinate bin overflow).  Within the eager
+      bounds ``reduce`` enforces (``max_terms`` / ``max_blocks``) the
+      headroom analysis makes this impossible; it exists as defense in
+      depth for direct ``backend.run`` callers and for escalation in
+      ``on_overflow="degrade"``.
+    * ``degraded`` — True iff ``on_overflow="degrade"`` re-planned the
+      reduction (chunked the stream, or escalated to a stronger tier).
+    * ``kept_rows`` — int32 count of in-range rows that entered the sum.
+
+    The contract: ``saturated`` is False whenever the finalized value is
+    the canonical one, and trips exactly when an int32 carry component
+    wrapped (see the boundary tests in ``tests/test_core.py``).
+    """
+
+    nonfinite: jnp.ndarray
+    saturated: jnp.ndarray
+    degraded: jnp.ndarray
+    kept_rows: jnp.ndarray
+
+
+def _status_false() -> ReduceStatus:
+    return ReduceStatus(jnp.asarray(False), jnp.asarray(False),
+                        jnp.asarray(False), jnp.asarray(0, jnp.int32))
+
+
 @functools.partial(jax.jit, static_argnames=("spec", "num_segments",
                                              "segmented", "squeeze_d",
-                                             "mesh", "axis_names"))
+                                             "mesh", "axis_names",
+                                             "with_status"))
 def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
-              segmented: bool, squeeze_d: bool, mesh=None, axis_names=None):
+              segmented: bool, squeeze_d: bool, mesh=None, axis_names=None,
+              with_status: bool = False):
     policy = get_policy(spec.policy)
     n, d = values.shape
     # ``reduce`` resolved backend=None before the jit boundary, so specs
@@ -94,6 +134,7 @@ def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
             f"{n} rows at block_size={spec.block_size} need {nb}; "
             f"raise block_size or split the stream")
 
+    status = _status_false() if with_status else None
     if n == 0:
         # empty stream: identity on every backend (the pallas grid cannot
         # be empty, and exact's max-abs pass needs at least one row)
@@ -106,12 +147,22 @@ def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
         # huge sentinel-labeled row would poison the scale for kept rows)
         values = jnp.where((segment_ids >= 0)[:, None], values,
                            jnp.zeros((), values.dtype))
+        if with_status:
+            # post-mask, so a NaN/Inf in a *dropped* row never trips the
+            # flag (it provably never enters any tier either)
+            status = status._replace(
+                nonfinite=jnp.logical_not(jnp.all(jnp.isfinite(values))),
+                kept_rows=jnp.sum((segment_ids >= 0).astype(jnp.int32)))
         domain, ctx = policy.prepare(values, n)
         run_kw = ({"mesh": mesh, "axis_names": axis_names}
                   if backend.distributed else {})
         carry = backend.run(domain, segment_ids, num_segments,
                             policy=policy, block_size=spec.block_size,
                             interpret=spec.interpret, **run_kw)
+        if with_status:
+            sat = policy.carry_status(carry)
+            if sat is not None:
+                status = status._replace(saturated=sat)
         out = policy.finalize(carry, ctx)            # (S, D) f32
 
     if spec.op == "mean" and n > 0:
@@ -131,7 +182,85 @@ def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
         out = out[0]
     if squeeze_d:
         out = out[..., 0]
-    return out
+    return (out, status) if with_status else out
+
+
+def _chunk_limit(policy, block_size: int) -> int:
+    """Largest block-aligned row count that satisfies every eager headroom
+    bound of ``policy`` at this ``block_size``."""
+    limit = policy.max_terms
+    if policy.max_blocks:
+        cap = policy.max_blocks * block_size
+        limit = cap if limit is None else min(limit, cap)
+    return max(block_size, (limit // block_size) * block_size)
+
+
+def _reduce_degrade(values, segment_ids, *, spec: ReduceSpec,
+                    num_segments: int, segmented: bool, squeeze_d: bool,
+                    mesh, axis_names):
+    """The ``on_overflow="degrade"`` planner (eager only).
+
+    Streams beyond the policy's headroom bounds are split into bound-sized
+    chunks in stream order; chunk sums are folded with a compensated
+    (two_sum) accumulator, so the degraded result stays within ulp-level
+    error of the unchunked one.  A tripped saturation flag escalates the
+    whole reduction to ``policy.escalation`` (the next-stronger tier).
+    Returns ``(out, ReduceStatus)``.
+    """
+    policy = get_policy(spec.policy)
+    n, d = values.shape
+    nb = -(-n // spec.block_size)
+    over = bool((policy.max_terms is not None and n > policy.max_terms)
+                or (policy.max_blocks and nb > policy.max_blocks))
+    sum_spec = spec.replace(op="sum")
+    run = functools.partial(_dispatch, spec=sum_spec,
+                            num_segments=num_segments, segmented=True,
+                            squeeze_d=False, mesh=mesh,
+                            axis_names=axis_names, with_status=True)
+    degraded = over
+    if over:
+        chunk = _chunk_limit(policy, spec.block_size)
+        acc = jnp.zeros((num_segments, d), jnp.float32)
+        comp = jnp.zeros_like(acc)
+        status = _status_false()
+        for i in range(0, n, chunk):
+            part, st = run(values[i:i + chunk], segment_ids[i:i + chunk])
+            acc, err = intac.two_sum(acc, part)
+            comp = comp + err
+            status = ReduceStatus(
+                jnp.logical_or(status.nonfinite, st.nonfinite),
+                jnp.logical_or(status.saturated, st.saturated),
+                status.degraded, status.kept_rows + st.kept_rows)
+        out = acc + comp
+    else:
+        out, status = run(values, segment_ids)
+
+    if bool(status.saturated):
+        if policy.escalation is None:
+            raise OverflowError(
+                f"policy {policy.name!r} saturated an int32 carry and has "
+                f"no stronger tier to escalate to; split the stream")
+        out, status = _reduce_degrade(
+            values, segment_ids, spec=spec.replace(policy=policy.escalation),
+            num_segments=num_segments, segmented=segmented,
+            squeeze_d=squeeze_d, mesh=mesh, axis_names=axis_names)
+        return out, status._replace(degraded=jnp.asarray(True))
+    if spec.op == "mean" and n > 0:
+        # same exact-integer count scheme as _dispatch, over the full
+        # stream (bitwise independent of the chunking)
+        mids = mask_out_of_range(segment_ids, num_segments)
+        ids_safe = jnp.where(mids >= 0, mids, num_segments)
+        cnt = jnp.zeros((num_segments + 1, 1), jnp.int32) \
+            .at[ids_safe].add(1)[:num_segments]
+        out = out / jnp.maximum(cnt, 1).astype(jnp.float32)
+
+    status = status._replace(
+        degraded=jnp.logical_or(status.degraded, jnp.asarray(degraded)))
+    if not segmented:
+        out = out[0]
+    if squeeze_d:
+        out = out[..., 0]
+    return out, status
 
 
 def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
@@ -139,7 +268,9 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
            backend: Optional[str] = None, block_size: int = 512,
            interpret: Optional[bool] = None,
            mesh=None, axis_names=None,
-           spec: Optional[ReduceSpec] = None) -> jnp.ndarray:
+           spec: Optional[ReduceSpec] = None,
+           with_status: bool = False,
+           on_overflow: str = "raise") -> jnp.ndarray:
     """Reduce a value stream, optionally partitioned into labeled sets.
 
     Args:
@@ -168,10 +299,21 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
       spec: a prebuilt ``ReduceSpec``; overrides the per-call knobs above
         (``mesh``/``axis_names`` are environment, not spec, and still
         apply).
+      with_status: also return a ``ReduceStatus`` (NaN/Inf in kept rows,
+        int32 carry saturation, degradation, kept-row count).  Static, so
+        ``False`` (the default) costs the hot path nothing.
+      on_overflow: "raise" (default) rejects streams beyond the policy's
+        integer-headroom bounds with an eager ``ValueError``; "degrade"
+        re-plans instead — over-bound streams are chunked and folded with
+        a compensated accumulator, and a saturated carry escalates to the
+        policy's next-stronger tier (``Policy.escalation``).  Degradation
+        is eager-only (it inspects runtime flags), and is reported via
+        ``ReduceStatus.degraded``.
 
     Returns:
       f32 array: (num_segments, D) / (num_segments,) when segmented,
-      (D,) / scalar otherwise.
+      (D,) / scalar otherwise.  With ``with_status=True``, a tuple
+      ``(result, ReduceStatus)``.
 
     >>> import jax.numpy as jnp
     >>> from repro.reduce import reduce
@@ -185,7 +327,15 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
     >>> float(reduce(jnp.arange(6.0), policy="exact2",       # multi-device
     ...              backend="shard_map"))
     15.0
+    >>> out, status = reduce(jnp.arange(4.0), policy="exact2",
+    ...                      with_status=True)
+    >>> (float(out), bool(status.nonfinite), bool(status.saturated),
+    ...  int(status.kept_rows))
+    (6.0, False, False, 4)
     """
+    if on_overflow not in ("raise", "degrade"):
+        raise ValueError(f"on_overflow must be 'raise' or 'degrade', "
+                         f"got {on_overflow!r}")
     if spec is None:
         spec = ReduceSpec(op=op, policy=policy, backend=backend,
                           block_size=block_size, interpret=interpret)
@@ -240,6 +390,18 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
         num_segments = 1
         segment_ids = jnp.zeros((values.shape[0],), jnp.int32)
 
+    if on_overflow == "degrade":
+        if isinstance(values, jax.core.Tracer):
+            raise ValueError(
+                "on_overflow='degrade' re-plans the reduction from runtime "
+                "flags and is eager-only; call reduce outside jit, or keep "
+                "on_overflow='raise'")
+        out, status = _reduce_degrade(
+            values, segment_ids, spec=spec, num_segments=int(num_segments),
+            segmented=segmented, squeeze_d=squeeze_d, mesh=mesh,
+            axis_names=axis_names)
+        return (out, status) if with_status else out
     return _dispatch(values, segment_ids, spec=spec,
                      num_segments=int(num_segments), segmented=segmented,
-                     squeeze_d=squeeze_d, mesh=mesh, axis_names=axis_names)
+                     squeeze_d=squeeze_d, mesh=mesh, axis_names=axis_names,
+                     with_status=with_status)

@@ -23,11 +23,12 @@ addition order, results are bitwise identical across backends:
                     (``merge_carry_across`` -> ``Policy.merge_across``)
                     before one finalize.  Integer carry components merge
                     by associative int32 psum — bitwise identical to the
-                    single-device schedule *at any shard count* (all of
-                    exact/procrastinate, and exact2's hi/lo limbs); float
-                    carry state (fast/compensated carries, exact2's
-                    residual pair) keeps documented tolerance via an
-                    order-pinned fold instead (see docs/architecture.md).
+                    single-device schedule *at any shard count* (every
+                    carry component of exact / exact2 / procrastinate,
+                    exact2's residual included since its digit redesign);
+                    float carry state (fast/compensated carries) keeps
+                    documented tolerance via an order-pinned fold instead
+                    (see docs/architecture.md and docs/robustness.md).
 
 New executors (GPU pallas, ...) drop in with ``@register_backend``; the
 supported-policies capability set gates both explicit selection and
@@ -323,12 +324,13 @@ def _run_shard_map(values, segment_ids, num_segments, *, policy: Policy,
     Invariant: integer carry state is bitwise identical to the
     single-device schedule at any shard count, because ``prepare`` already
     fixed the global quantization scale / window anchor and integer carry
-    addition is associative — that is the whole result for ``exact`` /
-    ``procrastinate``, and the int32 hi/lo limbs for ``exact2`` (whose
-    finalized float also folds the residual limb: within 1 ulp of the f64
-    reference, tolerance rather than bits across shard counts).  The
-    float tiers (fast / compensated) change their cross-shard combine
-    order with the shard count — documented tolerance, not bitwise.
+    addition is associative — that is the whole result for ``exact``,
+    ``procrastinate``, *and* ``exact2`` (whose residual travels as
+    exponent-indexed int32 digits, so even its finalized float is bitwise
+    at any shard count, mesh shape, or device permutation — the elastic
+    guarantee in docs/robustness.md).  The float tiers (fast /
+    compensated) change their cross-shard combine order with the shard
+    count — documented tolerance, not bitwise.
     """
     # deferred: collective imports this module's sentinel at load time
     from .collective import merge_carry_across

@@ -19,9 +19,11 @@ they are the same accuracy knob the array API exposes:
   * ``exact2``      — three-limb INTAC psum: the per-device hi/lo limb
     split keeps full-resolution quantization (scale sized by magnitude
     alone) for up to 2^15 devices, and the exactly-captured quantization
-    residual rides along as a compensated third limb (device-order
-    two_sum fold), so the mean is within 1 ulp of the f64 reference for
-    arbitrary f32 gradients; one carry-resolve per reduction.
+    residual is re-expressed as exponent-indexed int32 digits (a small
+    Neal-style superaccumulator, arXiv 1505.05571) that psum exactly, so
+    the mean is within 1 ulp of the f64 reference *and* bitwise-invariant
+    across device count, mesh shape, and device permutation; one
+    carry-resolve per reduction.
   * ``procrastinate`` — per-exponent-bin integer psum: each device splits
     its gradient into exponent-window digits, every bin psums in the
     exact integer domain, and one carry-resolve + compensated combine
@@ -52,7 +54,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import intac
-from .policy import Policy
+from .backends import get_backend
+from .policy import Policy, get_policy
 
 COLLECTIVE_POLICIES = ("fast", "compensated", "exact", "exact2",
                        "procrastinate")
@@ -66,10 +69,11 @@ def merge_carry_across(policy: Policy, carry, axis_names):
     (``Policy.merge_across``): one associative int32 psum per integer
     carry component (any psum topology gives the same bits — the
     ``intac_psum3``/``bin_psum`` argument applied to carries that are
-    *already* in the integer domain), and an all-gather + strict
+    *already* in the integer domain; since the residual-digit redesign
+    this covers every exact2 component too), and an all-gather + strict
     device-order fold with ``policy.merge`` for order-sensitive float
-    state (compensated's carry, exact2's residual pair), which pins the
-    combine schedule the way the block schedule pins per-shard order.
+    state (compensated's carry), which pins the combine schedule the way
+    the block schedule pins per-shard order.
     """
     return policy.merge_across(carry, axis_names)
 
@@ -126,6 +130,57 @@ def collective_mean(x: jnp.ndarray, axis_names: Sequence[str], *,
 
     raise ValueError(f"unknown collective policy {policy!r}; "
                      f"choose from {COLLECTIVE_POLICIES}")
+
+
+def elastic_reduce_mean(stack: jnp.ndarray, axis_names, *,
+                        policy: str = "exact2",
+                        block_size: int = 512) -> jnp.ndarray:
+    """Topology-elastic global mean of a sharded item stack.
+
+    ``stack`` is this shard's (m_local, ...) slice of a global stack of
+    items (microbatch gradients, per-example losses); the result is the
+    mean over *all* items on *all* shards, with the elastic guarantee:
+    for a bitwise policy (``exact2`` since the residual-digit redesign,
+    ``exact``, ``procrastinate``) the returned floats are bit-identical
+    no matter how the same global stack is split across devices — 1x8,
+    2x4, 8x1, or any permutation.  Three ingredients make that hold:
+
+      * the quantization scale is sized from a ``pmax``-shared global
+        max, so every shard prepares on the same grid;
+      * the carry out of the local block schedule is partition-invariant
+        (canonical integer limbs / exponent-indexed digits are pure
+        functions of the global integer sums);
+      * cross-shard merge is one associative integer ``psum`` per carry
+        component (``merge_carry_across``).
+
+    Must run inside ``shard_map``.  This is the reduction under
+    ``repro.distributed.collectives.make_elastic_train_step`` and the
+    resume-anywhere checkpoint story in ``docs/robustness.md``.
+
+    >>> import jax, jax.numpy as jnp, numpy as np
+    >>> from jax.sharding import Mesh, PartitionSpec as P
+    >>> from jax.experimental.shard_map import shard_map
+    >>> mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    >>> f = lambda x: elastic_reduce_mean(x, ("data",))
+    >>> out = shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P(),
+    ...                 check_rep=False)(jnp.asarray([[1.0, 3.0]]))
+    >>> [float(v) for v in out]
+    [1.0, 3.0]
+    """
+    axes = tuple(axis_names)
+    pol = get_policy(policy)
+    m_local = stack.shape[0]
+    flat = stack.reshape(m_local, -1)                       # (m, D)
+    num_total = jax.lax.psum(m_local, axes)
+    # shared grid: every shard quantizes against the global max
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(flat)), axes)
+    domain, ctx = pol.prepare(flat, num_total, shared_max=gmax)
+    ids = jnp.zeros(m_local, jnp.int32)
+    carry = get_backend("blocked").run(domain, ids, 1, policy=pol,
+                                       block_size=block_size)
+    carry = merge_carry_across(pol, carry, axes)
+    out = pol.finalize(carry, ctx)[0]                       # (D,)
+    return (out / num_total).reshape(stack.shape[1:])
 
 
 def collective_mean_tree(grads, residuals, axis_names, *,

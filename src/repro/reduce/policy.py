@@ -16,16 +16,18 @@ same block schedule (so a policy swap never changes the data movement):
     paper's "pay for normalization once per set".  The scale is sized so
     the *whole stream* fits single-limb int32 headroom, so resolution
     shrinks as 1/N: cheap state, but long streams lose precision.
-  * ``exact2``        — three-limb int32+residual carry-save
-    (``core.intac.Limb3State`` semantics): the per-block contribution
-    splits into (hi, lo) limbs — headroom from the second limb instead of
-    the scale — while the third limb carries the exactly-captured
-    quantization residual ``x - descale(quantize(x, scale), scale)``
-    compensated-style.  The integer limbs stay bitwise order/block/
-    backend-invariant; the residual limb closes the old dyadic-grid gap,
-    so the finalized sum is within 1 ulp of the f64 reference for
-    *arbitrary* f32 inputs at any stream length up to 2^24 rows (the
-    residual's float fold gives tolerance, not bits, under re-ordering).
+  * ``exact2``        — three-limb all-integer carry-save: the per-block
+    contribution splits into (hi, lo) limbs — headroom from the second
+    limb instead of the scale — while the third limb carries the
+    exactly-captured quantization residual
+    ``x - descale(quantize(x, scale), scale)`` as per-element integer
+    digit bins (a small superaccumulator, Neal arXiv 1505.05571, at the
+    quantum-anchored ``intac.RES_BIN_BITS`` window).  Every carry
+    component is an associatively-added int32 array, so the *finalized
+    float* — not just the limbs — is bitwise invariant across block
+    size, backend, shard count, mesh shape, and input permutation, and
+    within 1 ulp of the f64 reference for *arbitrary* f32 inputs at any
+    stream length up to 2^24 rows.
   * ``procrastinate`` — exponent-indexed bins after Liguori (arXiv
     2406.05866) / Neal (arXiv 1505.05571): each f32 value splits exactly
     into per-exponent-window integer digits, bins accumulate in int32,
@@ -36,12 +38,17 @@ same block schedule (so a policy swap never changes the data movement):
     catastrophic cancellation the bound is absolute — N * 2^-49 of the
     max — not relative), at NUM_BINS x the accumulator state.
 
-The integer tiers' integer state is bitwise order-independent: any block
+The integer tiers are bitwise order-independent end to end: any block
 size, backend, input permutation, or device layout produces identical
-bits for ``exact``/``procrastinate`` results and for ``exact2``'s int32
-hi/lo limbs (``exact2``'s *finalized float* additionally folds the
-residual limb — deterministic for a fixed schedule, ulp-level tolerance
-across schedules).
+bits for the ``exact``, ``exact2``, and ``procrastinate`` *results* (all
+of their carry state is associatively-added int32, canonicalized once at
+finalize).  The integer tiers also carry saturation guard rails: carry
+updates run through ``intac.wrap_add`` and pool wrap events into an
+overflow counter surfaced via ``carry_status`` (the
+``ReduceStatus.saturated`` flag of ``reduce(..., with_status=True)``) —
+within the documented ``max_block_size``/``max_blocks``/``max_terms``
+bounds the flags provably cannot trip; they are the defense-in-depth
+layer for direct ``backend.run`` callers and future tiers.
 
 A policy owns five hooks, each pure and shape-polymorphic:
 
@@ -146,13 +153,19 @@ class Policy:
     #: largest block *count* the per-block carry headroom covers (None =
     #: any); ``reduce`` validates ceil(n / block_size) against it
     max_blocks: Optional[int] = None
+    #: largest total row count the carry headroom covers (None = any);
+    #: ``prepare`` raises past it, and ``reduce(..., on_overflow=
+    #: "degrade")`` chunks the stream at this bound instead
+    max_terms: Optional[int] = None
+    #: the next-stronger tier ``reduce(..., on_overflow="degrade")``
+    #: re-runs through when this tier reports saturation (None = no
+    #: stronger tier; saturation then raises)
+    escalation: Optional[str] = None
     #: True when ``merge`` is plain elementwise addition, so a cross-device
     #: carry merge may lower to one ``lax.psum`` per carry component (the
     #: integer tiers: associative, any reduction topology gives the same
     #: bits).  False forces the gathered in-order fold (compensated: its
     #: two-sum merge is order-sensitive, so the fold order must be pinned).
-    #: Mixed carries (exact2: psum'able integer limbs + an order-pinned
-    #: residual pair) override ``merge_across`` instead.
     merge_is_add: bool = True
 
     @property
@@ -161,12 +174,17 @@ class Policy:
         policy mixes domains (exact2: int32 limbs + f32 residual pair)."""
         return (self.acc_dtype,) * self.carry_len
 
-    def prepare(self, values: jnp.ndarray, num_terms: int):
+    def prepare(self, values: jnp.ndarray, num_terms: int, *,
+                shared_max=None):
         """Map raw (N, D) values into the accumulation domain.
 
         Returns (domain_values, ctx); ctx is passed back to ``finalize``.
         The domain may be wider than (N, D) — e.g. per-element digit
         splits — as long as ``finalize`` maps the carry back to (S, D).
+        ``shared_max`` overrides the local max-|value| statistic the
+        integer tiers size their scale / window anchor from — collectives
+        (``elastic_reduce_mean``) pass a pmax-shared global so every
+        shard prepares on the identical grid.
         """
         return values.astype(jnp.float32), None
 
@@ -211,8 +229,7 @@ class Policy:
         topology, same bits — the integer-tier contract); otherwise the
         carries all-gather and fold strictly in device order with
         ``merge``, pinning the combine schedule the way the block schedule
-        pins per-shard order.  Policies with mixed carries (exact2)
-        override this with a per-component lowering.
+        pins per-shard order.
         """
         axes = tuple(axis_names)
         if self.merge_is_add:
@@ -223,6 +240,15 @@ class Policy:
         for k in range(1, nshards):
             merged = self.merge(merged, tuple(g[k] for g in gathered))
         return merged
+
+    def carry_status(self, carry):
+        """Saturation guard rail: a scalar bool (True = some integer
+        carry wrapped int32 and the result is not trustworthy), or None
+        for tiers with no overflow mode (float carries, or a-priori
+        scale sizing like ``exact``).  Cheap and jittable — the flags
+        are threaded through the carry by ``update``/``merge``, so
+        reading them costs one reduction."""
+        return None
 
     def finalize(self, carry, ctx) -> jnp.ndarray:
         return carry[0]
@@ -273,10 +299,16 @@ class ExactPolicy(Policy):
 
     name = "exact"
     acc_dtype = jnp.int32
+    #: at saturation (possible only for direct backend.run misuse — the
+    #: scale sizing makes overflow unreachable through ``reduce``), the
+    #: two-limb tier removes the headroom-vs-resolution trade entirely
+    escalation = "exact2"
 
-    def prepare(self, values: jnp.ndarray, num_terms: int):
+    def prepare(self, values: jnp.ndarray, num_terms: int, *,
+                shared_max=None):
         v = values.astype(jnp.float32)
-        scale = choose_scale(jnp.max(jnp.abs(v)), max(num_terms, 1))
+        m = jnp.max(jnp.abs(v)) if shared_max is None else shared_max
+        scale = choose_scale(m, max(num_terms, 1))
         return quantize(v, scale), scale
 
     def finalize(self, carry, ctx) -> jnp.ndarray:
@@ -285,8 +317,9 @@ class ExactPolicy(Policy):
 
 @register_policy
 class Exact2Policy(Policy):
-    """Three-limb INTAC carry-save: headroom no longer trades against
-    resolution, and "exact" means exact off the dyadic grid too.
+    """Three-limb all-integer INTAC carry-save: headroom no longer trades
+    against resolution, "exact" means exact off the dyadic grid too, and
+    the finalized float is bitwise invariant at any topology.
 
     The scale is sized by magnitude alone (``QBITS`` bits below int32, so
     a 512-row block contribution cannot overflow), each block's int32
@@ -294,102 +327,121 @@ class Exact2Policy(Policy):
     and the third limb carries what quantization rounded away — the
     per-element residual ``x - descale(quantize(x, scale), scale)``,
     captured *exactly* (Dekker/Sterbenz; see ``core.intac.limb_split3``)
-    in ``prepare`` and folded compensated-style (``two_sum`` + pooled
-    compensation) through the schedule.  ``core.intac.Limb3State``
-    semantics threaded through the block schedule: up to 2^24 rows
-    accumulate carry-free; ``finalize`` is one ``limbs_resolve3``.
+    in ``prepare`` and immediately re-split into
+    ``intac.RES_NUM_BINS`` integer digits of the quantum-anchored
+    ``intac.RES_BIN_BITS`` superaccumulator window (Neal, arXiv
+    1505.05571; the same bin machinery as the procrastinate tier).  All
+    three limbs are then associatively-added int32 state: one int32 dot
+    per block, up to 2^24 rows carry-free, and ``finalize`` is one
+    ``limbs_resolve3_binned`` — a pure function of the canonical integer
+    totals and the scale.
 
-    Guarantee split: the int32 hi/lo limbs are bitwise independent of
-    block size, backend, shard count, and input order (associative
-    integer adds + canonical carry-resolve); the finalized float — which
-    also folds the residual limb — is within 1 ulp of the f64 reference
-    for arbitrary f32 inputs, deterministic for a fixed schedule, but
-    drifts at the ulp level when the residual fold order changes (block
-    size / shard count / permutation).  Old behavior — silently dropping
-    sub-quantum bits of non-dyadic inputs — was a defect, not a contract.
+    Guarantee: the finalized float — not merely the hi/lo limbs — is
+    bitwise independent of block size, backend, shard count, mesh shape,
+    and input order, and within 1 ulp of the f64 reference for arbitrary
+    f32 inputs (per-element residual truncation below the 49-bit window
+    is <= max|x| * 2^-71 per element).  This is what makes elastic
+    resume bit-identical: checkpoint on 2 devices, resume on 8, same
+    bits.  Saturation guard rail: carry adds run through
+    ``intac.wrap_add`` and pool wrap events into the ``ovf`` carry
+    (``carry_status`` / ``ReduceStatus.saturated``) — unreachable within
+    the enforced row/block bounds, exact at the int32 edge beyond them.
     """
 
     name = "exact2"
-    #: (hi, lo) int32 limbs + (res, comp) compensated f32 residual pair
+    #: (hi, lo) int32 limbs + binned int32 residual digits + ovf counter
     carry_len = 4
     acc_dtype = jnp.int32
     #: per-value quantization bits: block contribs stay below int32 for
     #: blocks up to 2^(30-QBITS) = 512 rows
     QBITS = 21
     max_block_size = 1 << (30 - QBITS)
-    #: limb headroom: every block adds one lo remainder < 2^15 and one
-    #: hi part <= 2^15 to the carries, so the *block count* — not the row
-    #: count — is what the int32 limb sums bound: 2^16 blocks is the hard
+    #: limb headroom: every block adds one lo remainder < 2^15, one hi
+    #: part <= 2^15, and residual digits <= 2^15 (512 rows x 64 max per
+    #: digit) to the carries, so the *block count* — not the row count —
+    #: is what the int32 carry sums bound: 2^16 blocks is the hard
     #: ceiling; 2^15 keeps a 2x margin (2^24 rows at the max block size,
     #: proportionally fewer for smaller blocks — both guards enforced).
-    #: The residual limb adds no bound of its own: per-element residuals
-    #: are below half a quantum, so the f32 fold cannot overflow.
     max_blocks = 1 << (30 - intac.LIMB_SHIFT)
     MAX_TERMS = max_block_size * max_blocks
-    #: the residual pair merges through an order-pinned two_sum fold;
-    #: the integer limbs still psum — see ``merge_across``
-    merge_is_add = False
+    max_terms = MAX_TERMS
+    #: past saturation (unreachable through ``reduce``'s bounds), the
+    #: procrastinate tier's per-element digits have magnitude-independent
+    #: headroom
+    escalation = "procrastinate"
+    #: every carry component — limbs, residual bins, overflow counter —
+    #: adds associatively, so cross-device merges are one int32 psum per
+    #: component: bitwise identical at any shard count or mesh shape
+    merge_is_add = True
+
+    #: domain layout: [q | digit bin 0 | ... | digit bin RES_NUM_BINS-1]
+    _PARTS = 1 + intac.RES_NUM_BINS
 
     @property
     def carry_dtypes(self):
-        return (jnp.int32, jnp.int32, jnp.float32, jnp.float32)
+        return (jnp.int32,) * self.carry_len
 
-    def prepare(self, values: jnp.ndarray, num_terms: int):
+    def prepare(self, values: jnp.ndarray, num_terms: int, *,
+                shared_max=None):
         if num_terms > self.MAX_TERMS:
             raise ValueError(
                 f"exact2: {num_terms} rows exceed the two-limb headroom "
                 f"bound ({self.MAX_TERMS}); split the stream and merge "
                 f"with core.intac.limb_merge3")
         v = values.astype(jnp.float32)
-        scale = choose_scale(jnp.max(jnp.abs(v)), 1, qbits=self.QBITS)
+        n, d = v.shape
+        m = jnp.max(jnp.abs(v)) if shared_max is None else shared_max
+        scale = choose_scale(m, 1, qbits=self.QBITS)
         q = quantize(v, scale)
         res = v - dequantize(q, scale)        # exact: Dekker/Sterbenz
-        # one (N, 2D) f32 domain: quantized half | residual half.  The
-        # quantized values are below 2^QBITS = 2^21 in magnitude, so the
-        # f32 round-trip back to int32 in ``contrib`` is exact.
-        return jnp.concatenate([q.astype(jnp.float32), res], axis=1), scale
+        # the residual in quantum units: |res * scale| <= 1/2, and the
+        # power-of-two multiply is exact, so the digit split below loses
+        # nothing above the 49-bit window
+        digits = intac.bin_split(res * scale, 0, bits=intac.RES_BIN_BITS,
+                                 num=intac.RES_NUM_BINS)   # (NB, N, D)
+        # one (N, (1+NB)*D) f32 domain: quantized part | digit planes.
+        # Every column holds an integer below 2^QBITS (q) or 2^6
+        # (digits), so the f32 round-trip back to int32 in ``contrib``
+        # is exact and a single int32 dot covers the whole domain.
+        planes = jnp.moveaxis(digits, 0, 1).reshape(
+            n, intac.RES_NUM_BINS * d)
+        return jnp.concatenate([q.astype(jnp.float32), planes],
+                               axis=1), scale
 
     def contrib(self, onehot: jnp.ndarray, vals: jnp.ndarray):
-        """Two dots per block: the quantized half in exact int32, the
-        residual half in f32 (the same dot lowering on every backend)."""
-        d = vals.shape[1] // 2
-        ci = jnp.dot(onehot.astype(jnp.int32).T,
-                     vals[:, :d].astype(jnp.int32),
-                     preferred_element_type=jnp.int32)
-        cr = jnp.dot(onehot.astype(jnp.float32).T, vals[:, d:],
-                     preferred_element_type=jnp.float32)
-        return (ci, cr)
+        """One int32 dot per block over the whole quantized+digits
+        domain (the same dot lowering on every backend)."""
+        return jnp.dot(onehot.astype(jnp.int32).T, vals.astype(jnp.int32),
+                       preferred_element_type=jnp.int32)
 
     def init(self, num_segments: int, d: int):
-        # d is the (N, 2D) domain width: carries are (S, D)
-        z = jnp.zeros((num_segments, d // 2), jnp.int32)
-        r = jnp.zeros((num_segments, d // 2), jnp.float32)
-        return (z, z, r, r)
+        # d is the (N, (1+NB)*D) domain width: limb carries are (S, D)
+        dd = d // self._PARTS
+        z = jnp.zeros((num_segments, dd), jnp.int32)
+        rb = jnp.zeros((num_segments, intac.RES_NUM_BINS * dd), jnp.int32)
+        return (z, z, rb, z)
 
     def update(self, carry, contrib):
-        hi, lo, res, comp = carry
-        ci, cr = contrib
-        chi, clo = intac.limb_split(ci)
-        s, e = two_sum(res, cr)
-        return (hi + chi, lo + clo, s, comp + e)
+        hi, lo, rbins, ovf = carry
+        dd = hi.shape[1]
+        chi, clo = intac.limb_split(contrib[:, :dd])
+        nhi, w1 = intac.wrap_add(hi, chi)
+        nlo, w2 = intac.wrap_add(lo, clo)
+        nrb, w3 = intac.wrap_add(rbins, contrib[:, dd:])
+        wb = w1.astype(jnp.int32) + w2.astype(jnp.int32)
+        for k in range(intac.RES_NUM_BINS):
+            wb = wb + w3[:, k * dd:(k + 1) * dd].astype(jnp.int32)
+        return (nhi, nlo, nrb, ovf + wb)
 
-    def merge(self, a, b):
-        """Integer limbs add exactly (any order, same bits); the residual
-        pair merges through ``two_sum`` with pooled compensation."""
-        s, e = two_sum(a[2], b[2])
-        return (a[0] + b[0], a[1] + b[1], s, a[3] + b[3] + e)
-
-    def merge_across(self, carry, axis_names):
-        """Mixed lowering: one associative int32 psum per integer limb
-        (bitwise identical to the single-device schedule at any shard
-        count), and an all-gather + strict device-order two_sum fold for
-        the residual pair (deterministic; tolerance, not bits) — the one
-        shared implementation in ``core.intac.limb3_merge_across``."""
-        return intac.limb3_merge_across(*carry, axis_names)
+    def carry_status(self, carry):
+        return jnp.any(carry[3] != 0)
 
     def finalize(self, carry, ctx) -> jnp.ndarray:
-        hi, lo, res, comp = carry
-        return intac.limbs_resolve3(hi, lo, res, ctx, comp=comp)
+        hi, lo, rbins, _ovf = carry
+        s, wd = rbins.shape
+        bins = jnp.moveaxis(rbins.reshape(s, intac.RES_NUM_BINS,
+                                          wd // intac.RES_NUM_BINS), 1, 0)
+        return intac.limbs_resolve3_binned(hi, lo, bins, ctx)
 
 
 @register_policy
@@ -412,9 +464,13 @@ class ProcrastinatePolicy(Policy):
     """
 
     name = "procrastinate"
+    #: bin digits + the wrap-event overflow counter
+    carry_len = 2
     acc_dtype = jnp.int32
+    max_terms = intac.BIN_MAX_TERMS
 
-    def prepare(self, values: jnp.ndarray, num_terms: int):
+    def prepare(self, values: jnp.ndarray, num_terms: int, *,
+                shared_max=None):
         if num_terms > intac.BIN_MAX_TERMS:
             raise ValueError(
                 f"procrastinate: {num_terms} rows exceed the per-bin "
@@ -422,10 +478,28 @@ class ProcrastinatePolicy(Policy):
                 f"stream and add the bin carries")
         v = values.astype(jnp.float32)
         n, d = v.shape
-        e_ref = intac.bin_ref_exponent(jnp.max(jnp.abs(v)))
+        m = jnp.max(jnp.abs(v)) if shared_max is None else shared_max
+        e_ref = intac.bin_ref_exponent(m)
         digits = intac.bin_split(v, e_ref)           # (NB, N, D)
         domain = jnp.moveaxis(digits, 0, 1).reshape(n, intac.NUM_BINS * d)
         return domain, e_ref
+
+    def init(self, num_segments: int, d: int):
+        # d is the (N, NB*D) domain width: the ovf counter is (S, D)
+        return (jnp.zeros((num_segments, d), jnp.int32),
+                jnp.zeros((num_segments, d // intac.NUM_BINS), jnp.int32))
+
+    def update(self, carry, contrib):
+        bins, ovf = carry
+        nb, w = intac.wrap_add(bins, contrib)
+        dd = ovf.shape[1]
+        wb = jnp.zeros_like(ovf)
+        for k in range(intac.NUM_BINS):
+            wb = wb + w[:, k * dd:(k + 1) * dd].astype(jnp.int32)
+        return (nb, ovf + wb)
+
+    def carry_status(self, carry):
+        return jnp.any(carry[1] != 0)
 
     def finalize(self, carry, ctx) -> jnp.ndarray:
         c = carry[0]                                 # (S, NB*D) int32

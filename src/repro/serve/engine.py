@@ -62,8 +62,37 @@ class Engine:
                                     mode="prefill", moe_impl="dense")
         return logits[:, -1:], pad_caches_to(self.cfg, caches, self.max_len)
 
-    def generate(self, requests: List[Request]) -> List[Result]:
+    def generate(self, requests: List[Request], *,
+                 truncate_prompts: bool = False) -> List[Result]:
+        """Generate for a batch of requests.
+
+        Validation happens up front — an empty batch, an empty prompt,
+        or a prompt that cannot fit the engine's ``max_len`` context
+        (together with at least one new token) fails fast with a
+        ``ValueError`` naming the offending request, instead of a shape
+        error deep in prefill.  ``truncate_prompts=True`` instead keeps
+        the *last* ``max_len - 1`` tokens of an over-long prompt (the
+        usual sliding-context behavior); ``Result.prompt_len`` then
+        reports the truncated length.
+        """
         cfg = self.cfg
+        if not requests:
+            raise ValueError("generate() needs at least one request; "
+                             "got an empty batch")
+        limit = self.max_len - 1       # decode stops at max_len - 1
+        for i, r in enumerate(requests):
+            if len(r.prompt) == 0:
+                raise ValueError(f"request {i} has an empty prompt")
+            if len(r.prompt) > limit and not truncate_prompts:
+                raise ValueError(
+                    f"request {i} prompt has {len(r.prompt)} tokens but "
+                    f"the engine context is max_len={self.max_len} "
+                    f"(prompts are capped at {limit} so at least one "
+                    f"token can be generated); shorten the prompt or "
+                    f"pass truncate_prompts=True")
+        if truncate_prompts:
+            requests = [dataclasses.replace(r, prompt=list(r.prompt)[-limit:])
+                        for r in requests]
         bsz = len(requests)
         plens = [len(r.prompt) for r in requests]
         pmax = max(plens)

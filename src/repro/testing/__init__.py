@@ -1,0 +1,11 @@
+"""Test-support utilities shipped with the package (not test code).
+
+``repro.testing.faults`` is the fault-injection harness behind
+``tests/test_faults.py`` and the robustness story in
+``docs/robustness.md``: NaN/Inf payload bursts, checkpoint bit flips and
+truncation, kill-mid-save crashes, and shard dropout — each built so the
+corresponding detection/degradation/recovery path can be asserted rather
+than hoped for.
+"""
+
+from . import faults  # noqa: F401

@@ -1,0 +1,187 @@
+"""Fault injectors for the robustness suite.
+
+Every injector models one concrete failure from docs/robustness.md and is
+paired (in ``tests/test_faults.py``) with an assertion that the stack
+*detects, degrades, or recovers* — never silently corrupts:
+
+  * ``inject_nonfinite``      — NaN/Inf payload bursts in a value stream
+                                (a poisoned loss/gradient microbatch);
+  * ``flip_bit`` /
+    ``truncate_file`` /
+    ``corrupt_checkpoint``    — storage faults in checkpoint artifacts,
+                                caught by the CRC sidecars as a structured
+                                ``CheckpointError``;
+  * ``kill-mid-save`` (CLI)   — a host dying between the shard write and
+                                the atomic rename, leaving a ``.tmp``
+                                directory that must never be restored;
+  * ``drop_shard_carry``      — a shard's policy carry lost before
+                                ``merge_carry_across`` (device dropout);
+                                carry merges are linear, so the correct
+                                degraded outcome is *exactly* the
+                                reduction over the surviving shards' rows.
+
+The kill-mid-save fault needs a real process death, so it ships as a CLI:
+
+    python -m repro.testing.faults kill-mid-save <ckpt_dir> <step>
+
+which builds a small deterministic tree, patches ``os.replace`` to die
+(exit code 9) the moment ``ckpt.save`` reaches the atomic-rename point,
+and leaves the partially-written ``step_XXXXXXXX.tmp`` behind for the
+test to probe.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from pathlib import Path
+
+import numpy as np
+
+KILL_EXIT_CODE = 9
+
+
+# ---------------------------------------------------------------------------
+# numerical faults
+# ---------------------------------------------------------------------------
+
+
+def inject_nonfinite(values, *, rows, kind: str = "nan"):
+    """Return a copy of ``values`` (N,) or (N, D) with ``rows`` poisoned.
+
+    ``kind``: "nan", "inf", or "both" (alternating NaN / -Inf).  ``rows``
+    is a sequence of row indices — the burst.
+    """
+    out = np.array(values, dtype=np.float32, copy=True)
+    for j, r in enumerate(rows):
+        if kind == "nan" or (kind == "both" and j % 2 == 0):
+            out[r] = np.nan
+        elif kind == "inf" or kind == "both":
+            out[r] = -np.inf
+        else:
+            raise ValueError(f"kind must be nan/inf/both, got {kind!r}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# storage faults
+# ---------------------------------------------------------------------------
+
+
+def flip_bit(path, *, seed: int = 0) -> int:
+    """Flip one pseudo-randomly chosen bit of ``path`` in place.
+
+    Returns the byte offset flipped.  Deterministic per (file size, seed).
+    """
+    p = Path(path)
+    blob = bytearray(p.read_bytes())
+    if not blob:
+        raise ValueError(f"flip_bit: {p} is empty")
+    rng = np.random.RandomState(seed)
+    off = int(rng.randint(0, len(blob)))
+    blob[off] ^= 1 << int(rng.randint(0, 8))
+    p.write_bytes(bytes(blob))
+    return off
+
+
+def truncate_file(path, *, frac: float = 0.5) -> int:
+    """Truncate ``path`` to ``frac`` of its size (storage ran out / torn
+    write).  Returns the new size."""
+    p = Path(path)
+    size = p.stat().st_size
+    keep = int(size * frac)
+    with open(p, "rb+") as f:
+        f.truncate(keep)
+    return keep
+
+
+def corrupt_checkpoint(ckpt_dir, step: int, *, mode: str = "bitflip",
+                       seed: int = 0) -> Path:
+    """Apply a storage fault to a finished checkpoint's shard file.
+
+    ``mode``: "bitflip" (one flipped bit in the msgpack blob) or
+    "truncate" (half the file gone).  Returns the path touched.  The CRC
+    sidecar is left intact — that is the point: restore must notice the
+    mismatch.
+    """
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    shards = sorted(d.glob("shard_*.msgpack"))
+    if not shards:
+        raise FileNotFoundError(f"no shard files under {d}")
+    target = shards[0]
+    if mode == "bitflip":
+        flip_bit(target, seed=seed)
+    elif mode == "truncate":
+        truncate_file(target)
+    else:
+        raise ValueError(f"mode must be bitflip/truncate, got {mode!r}")
+    return target
+
+
+# ---------------------------------------------------------------------------
+# collective faults
+# ---------------------------------------------------------------------------
+
+
+def drop_shard_carry(carry, axis_name: str, shard_index: int):
+    """Zero one shard's policy carry before ``merge_carry_across`` — the
+    collective face of device dropout (must run inside shard_map).
+
+    Carry merges are linear (integer adds / psums), so zeroing a shard's
+    carry is *exactly* equivalent to that shard's rows never existing:
+    the merged result degrades to the valid reduction over the surviving
+    shards — no garbage, and bitwise-reproducible for the integer tiers.
+    ``tests/test_faults.py`` asserts precisely that equivalence.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    keep = jax.lax.axis_index(axis_name) != shard_index
+    return tuple(jnp.where(keep, c, jnp.zeros_like(c)) for c in carry)
+
+
+# ---------------------------------------------------------------------------
+# kill-mid-save CLI
+# ---------------------------------------------------------------------------
+
+
+def _demo_tree():
+    rng = np.random.RandomState(1234)
+    return {"w": rng.randn(8, 4).astype(np.float32),
+            "b": rng.randn(4).astype(np.float32)}
+
+
+def _kill_mid_save(ckpt_dir: str, step: int):
+    """Run ``ckpt.save`` but die at the atomic-rename point, the way a
+    host loss would: shard + manifest written into the ``.tmp`` dir, the
+    rename never happens."""
+    from repro.ckpt import checkpoint as ckpt
+
+    real_replace = os.replace
+
+    def dying_replace(src, dst):          # noqa: ARG001 — signature match
+        sys.stderr.write(f"[faults] dying before rename of {src}\n")
+        sys.stderr.flush()
+        os._exit(KILL_EXIT_CODE)
+
+    os.replace = dying_replace
+    try:
+        ckpt.save(ckpt_dir, step, _demo_tree(), extra={"next_step": step + 1})
+    finally:                               # pragma: no cover — never reached
+        os.replace = real_replace
+    raise AssertionError("save returned: the injected crash did not fire")
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) == 3 and argv[0] == "kill-mid-save":
+        _kill_mid_save(argv[1], int(argv[2]))
+        return 2                           # pragma: no cover
+    sys.stderr.write(
+        "usage: python -m repro.testing.faults kill-mid-save "
+        "<ckpt_dir> <step>\n")
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -48,7 +48,13 @@ def make_train_step(cfg: ModelConfig, *, lr_fn: Callable,
     backend on that mesh; leave it None (local executor) unless you
     specifically want the reduction itself distributed — the bits are
     identical either way for the integer tiers, and an m-row stream per
-    leaf rarely merits per-leaf collectives."""
+    leaf rarely merits per-leaf collectives.
+
+    For data-parallel training whose step must be bitwise-reproducible
+    across *device topologies* (checkpoint on 2 devices, resume on 8),
+    use ``repro.distributed.collectives.make_elastic_train_step``
+    instead — it pins the microbatch grid to the global stream and
+    reduces through ``elastic_reduce_mean`` (docs/robustness.md)."""
     from repro import reduce as _reduce
 
     def grad_fn(p, b):

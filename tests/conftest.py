@@ -54,6 +54,9 @@ def pytest_addoption(parser):
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: subprocess / multi-device")
+    config.addinivalue_line(
+        "markers",
+        "faults: fault-injection robustness suite (tests/test_faults.py)")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -60,6 +60,78 @@ def test_missing_leaf_raises(tmp_path):
         ckpt.restore(str(tmp_path), 1, t2)
 
 
+def test_restore_missing_step_is_structured(tmp_path):
+    """Regression: restore on a step that was never written used to leak
+    a raw FileNotFoundError; callers (restore_latest_valid, the trainer)
+    key on CheckpointError."""
+    with pytest.raises(ckpt.CheckpointError, match="manifest.json"):
+        ckpt.restore(str(tmp_path), 42, _tree())
+    err = None
+    try:
+        ckpt.restore(str(tmp_path), 42, _tree())
+    except ckpt.CheckpointError as e:
+        err = e
+    assert err.step == 42 and str(tmp_path) in str(err.path)
+
+
+def test_restore_truncated_shard_is_structured(tmp_path):
+    """Regression: a torn shard used to surface as a raw zlib/msgpack
+    decode error."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    shard = next((tmp_path / "step_00000001").glob("shard_*.msgpack"))
+    blob = shard.read_bytes()
+    shard.write_bytes(blob[: len(blob) // 2])
+    with pytest.raises(ckpt.CheckpointError):
+        ckpt.restore(str(tmp_path), 1, t)
+
+
+def test_restore_corrupt_manifest_is_structured(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    (tmp_path / "step_00000001" / "manifest.json").write_text("{not json")
+    with pytest.raises(ckpt.CheckpointError, match="manifest"):
+        ckpt.restore(str(tmp_path), 1, t)
+
+
+def test_latest_step_empty_and_partial_dirs(tmp_path):
+    assert ckpt.latest_step(str(tmp_path)) is None
+    assert ckpt.latest_step(str(tmp_path / "never_created")) is None
+    (tmp_path / "step_00000004.tmp").mkdir()
+    assert ckpt.latest_step(str(tmp_path)) is None
+    ckpt.save(str(tmp_path), 2, _tree())
+    assert ckpt.latest_step(str(tmp_path)) == 2
+
+
+def test_restore_latest_valid_empty_dir_returns_none(tmp_path):
+    assert ckpt.restore_latest_valid(str(tmp_path), _tree()) is None
+    assert ckpt.restore_latest_valid(str(tmp_path / "nope"), _tree()) is None
+
+
+def test_restore_latest_valid_skips_broken_newest(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    ckpt.save(str(tmp_path), 2, t)
+    # newest loses its manifest (partial cleanup after a crash)
+    (tmp_path / "step_00000002" / "manifest.json").unlink()
+    tree, manifest, step = ckpt.restore_latest_valid(str(tmp_path), t)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(tree)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_v1_checkpoint_without_sidecar_still_restores(tmp_path):
+    """Back-compat: pre-CRC checkpoints have no .crc.json — restore is
+    lenient (no integrity check possible) instead of refusing."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    for sc in (tmp_path / "step_00000001").glob("*.crc.json"):
+        sc.unlink()
+    restored, _ = ckpt.restore(str(tmp_path), 1, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
 @pytest.mark.slow
 def test_failover_restart_equivalence(tmp_path):
     """The full drill: crash at step 6, restart, final loss must equal an

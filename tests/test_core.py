@@ -239,6 +239,69 @@ def test_limb3_accumulate_off_grid_within_1ulp():
             <= np.spacing(np.abs(ref.astype(np.float32)))).all()
 
 
+def test_wrap_add_trips_exactly_at_the_int32_edge():
+    """The wrap predicate is exact: carries within +/-1 of the int32
+    boundary flag iff the two's-complement sum actually wrapped."""
+    mx, mn = np.int32(2**31 - 1), np.int32(-(2**31))
+    cases = [(mx - 1, 1, False), (mx, 0, False), (mx, 1, True),
+             (mn + 1, -1, False), (mn, 0, False), (mn, -1, True),
+             (mx, mn, False), (0, 0, False)]
+    for a, b, wraps in cases:
+        s, w = intac.wrap_add(jnp.int32(a), jnp.int32(b))
+        assert bool(w) == wraps, (a, b)
+        if not wraps:
+            assert int(s) == int(a) + int(b)
+
+
+def test_limb_add3_saturation_boundary():
+    """ovf trips exactly when a limb add wraps — a carry landing *at*
+    2^31 - 1 is still canonical and raises no flag."""
+    mx = np.int32(2**31 - 1)
+    z = jnp.zeros((), jnp.float32)
+    scale = jnp.float32(1.0)
+    x = jnp.float32(2.0**15)        # quantizes to hi=1, lo=0
+
+    def state(hi):
+        return intac.Limb3State(jnp.int32(hi), jnp.int32(0), z, z, scale,
+                                jnp.int32(0))
+
+    at_edge = intac.limb_add3(state(mx - 1), x)
+    assert int(at_edge.hi) == int(mx) and int(at_edge.ovf) == 0
+    past = intac.limb_add3(state(mx), x)
+    assert int(past.ovf) == 1       # canonical total is now wrong
+    # a further non-wrapping add keeps (not resets) the count
+    again = intac.limb_add3(past, jnp.float32(1.0))
+    assert int(again.ovf) == 1
+    # None ovf (5-field pre-guard-rail construction) stays disabled
+    legacy = intac.Limb3State(jnp.int32(mx), jnp.int32(0), z, z, scale)
+    assert intac.limb_add3(legacy, x).ovf is None
+
+
+def test_limb_merge3_saturation_boundary():
+    """Merging pools both sides' wrap counts plus any wrap the merge
+    itself causes, and trips only when the canonical sum would wrap."""
+    mx = np.int32(2**31 - 1)
+    z = jnp.zeros((), jnp.float32)
+    scale = jnp.float32(1.0)
+
+    def state(hi, lo=0, ovf=0):
+        o = None if ovf is None else jnp.int32(ovf)
+        return intac.Limb3State(jnp.int32(hi), jnp.int32(lo), z, z, scale, o)
+
+    ok = intac.limb_merge3(state(mx - 1), state(1))
+    assert int(ok.hi) == int(mx) and int(ok.ovf) == 0
+    bad = intac.limb_merge3(state(mx), state(1))
+    assert int(bad.ovf) == 1
+    # both limbs wrap in one merge, on top of prior pooled counts
+    both = intac.limb_merge3(state(mx, mx, ovf=2), state(1, 1, ovf=3))
+    assert int(both.ovf) == 2 + 3 + 2
+    # None on both sides disables tracking; one-sided None counts as zero
+    assert intac.limb_merge3(state(1, ovf=None), state(2, ovf=None)).ovf \
+        is None
+    assert int(intac.limb_merge3(state(mx, ovf=None), state(1, ovf=4)).ovf) \
+        == 5
+
+
 def test_choose_scale_zero_and_nan_streams_are_benign():
     """max_abs == 0 (all-zero or all-padding stream) pins the unit scale
     instead of the degenerate near-2^127 clamp; a NaN statistic must not

@@ -20,13 +20,13 @@ from repro.kernels import ops
 
 BACKENDS = ("ref", "blocked", "pallas")
 POLICIES = ("fast", "compensated", "exact", "exact2", "procrastinate")
-#: the tiers with integer accumulation domains (exact2's finalized float
-#: additionally folds its compensated residual limb: the *integer limbs*
-#: are bitwise order-independent, the float is ulp-level tolerance when
-#: the fold order changes — see test_exact2_limbs_invariant_result_1ulp)
+#: the tiers with integer accumulation domains (exact2 carries its
+#: residual as exponent-indexed int32 digits, so its finalized float —
+#: like its canonical limbs — is a pure function of the integer carry;
+#: see test_exact2_limbs_invariant_result_1ulp)
 INT_POLICIES = ("exact", "exact2", "procrastinate")
 #: the tiers whose *finalized result* is bitwise order-independent
-BITWISE_POLICIES = ("exact", "procrastinate")
+BITWISE_POLICIES = ("exact", "exact2", "procrastinate")
 
 
 def _data(n, d, s, dtype, seed=0):

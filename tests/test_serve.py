@@ -69,6 +69,50 @@ def test_max_new_tokens_one_yields_one_token(engine):
     assert len(res[1].tokens) - res[1].prompt_len == 6
 
 
+def test_generate_rejects_empty_batch(engine):
+    with pytest.raises(ValueError, match="at least one request"):
+        engine.generate([])
+
+
+def test_generate_rejects_empty_prompt(engine):
+    reqs = [Request(prompt=[5, 6], max_new_tokens=2),
+            Request(prompt=[], max_new_tokens=2)]
+    with pytest.raises(ValueError, match="request 1 has an empty prompt"):
+        engine.generate(reqs)
+
+
+def test_generate_rejects_over_long_prompt(engine):
+    """A prompt that cannot fit max_len (plus one generated token) fails
+    fast with the offending index and sizes — not a shape error deep in
+    prefill."""
+    long = list(range(2, 2 + engine.max_len))      # max_len > limit
+    with pytest.raises(ValueError) as exc:
+        engine.generate([Request(prompt=[5], max_new_tokens=1),
+                         Request(prompt=long, max_new_tokens=1)])
+    msg = str(exc.value)
+    assert "request 1" in msg
+    assert f"{len(long)} tokens" in msg
+    assert f"max_len={engine.max_len}" in msg
+    assert "truncate_prompts=True" in msg
+
+
+def test_generate_truncate_prompts_keeps_tail(engine):
+    """truncate_prompts=True keeps the last max_len - 1 tokens and
+    decodes normally; prompt_len reports the truncated length."""
+    limit = engine.max_len - 1
+    long = [(3 + i) % engine.cfg.vocab for i in range(engine.max_len + 5)]
+    res = engine.generate([Request(prompt=long, max_new_tokens=1)],
+                          truncate_prompts=True)[0]
+    assert res.prompt_len == limit
+    assert res.tokens[:limit] == long[-limit:]
+    # exactly-at-limit prompts pass untouched either way
+    ok = [5] * limit
+    for flag in (False, True):
+        r = engine.generate([Request(prompt=ok, max_new_tokens=1)],
+                            truncate_prompts=flag)[0]
+        assert r.tokens[:limit] == ok
+
+
 def test_eos_stops(engine):
     # find whatever greedy emits first, then use it as eos
     probe = engine.generate([Request(prompt=[5, 5, 5], max_new_tokens=1,

@@ -25,10 +25,11 @@ from repro.core import intac
 REPO = Path(__file__).resolve().parent.parent
 POLICIES = ("fast", "compensated", "exact", "exact2", "procrastinate")
 INT_POLICIES = ("exact", "exact2", "procrastinate")
-#: tiers whose *finalized float* is bitwise at any shard count; exact2's
-#: guarantee splits: canonical int32 limbs bitwise, finalized float (which
-#: folds the residual limb in device order) to ulp-level tolerance
-BITWISE_POLICIES = ("exact", "procrastinate")
+#: tiers whose *finalized float* is bitwise at any shard count — every
+#: integer tier: all carry state (exact's int32 sum, exact2's limbs +
+#: binned residual digits, procrastinate's bins) adds associatively and
+#: finalizes canonically
+BITWISE_POLICIES = ("exact", "exact2", "procrastinate")
 
 
 def _data(n=700, d=8, s=5, seed=0):
@@ -112,19 +113,15 @@ def test_policy_merge_is_the_schedule_split(policy):
     out_merged = np.asarray(pol.finalize(merged, ctx))
     if policy in BITWISE_POLICIES:
         assert np.array_equal(out_full, out_merged)
-    elif policy == "exact2":
-        # split guarantee: the canonical integer limbs are bitwise equal
-        # (associative int32 adds), the finalized float — which folds the
-        # residual limb in schedule order — holds ulp-level tolerance
-        for a, b in zip(intac.limbs_canonical(full[0], full[1]),
-                        intac.limbs_canonical(merged[0], merged[1])):
-            assert np.array_equal(np.asarray(a), np.asarray(b))
-        np.testing.assert_allclose(out_merged, out_full, rtol=1e-6,
-                                   atol=1e-6)
+        if policy == "exact2":
+            # the canonical integer limbs are bitwise equal too
+            for a, b in zip(intac.limbs_canonical(full[0], full[1]),
+                            intac.limbs_canonical(merged[0], merged[1])):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
     else:
         np.testing.assert_allclose(out_merged, out_full, rtol=1e-6,
                                    atol=1e-6)
-    assert pol.merge_is_add == (policy not in ("compensated", "exact2"))
+    assert pol.merge_is_add == (policy != "compensated")
 
 
 def test_merge_across_accumulator_single_device():

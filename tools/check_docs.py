@@ -52,6 +52,12 @@ REQUIRED_SYMBOLS = [
     "repro.reduce.Limb3Accumulator",
     "repro.reduce.collective_mean",
     "repro.reduce.merge_carry_across",
+    # the robustness surface (docs/robustness.md): status flags, elastic
+    # resume, and the crash-safe checkpoint entry points
+    "repro.reduce.ReduceStatus",
+    "repro.reduce.elastic_reduce_mean",
+    "repro.ckpt.checkpoint.CheckpointError",
+    "repro.ckpt.checkpoint.restore_latest_valid",
 ]
 
 
