@@ -114,6 +114,7 @@ def main(argv=None) -> None:
         paper_tables.table6_reduce_policies(rows, smoke=True)
         paper_tables.table6b_large_n_resolution(rows, smoke=True)
         paper_tables.table7_shard_scaling(rows, smoke=True)
+        paper_tables.table8_serving(rows, smoke=True)
         paper_tables.table9_fault_overhead(rows, smoke=True)
     else:
         paper_tables.table1_schedule(rows)
@@ -123,6 +124,7 @@ def main(argv=None) -> None:
         paper_tables.table6_reduce_policies(rows)
         paper_tables.table6b_large_n_resolution(rows)
         paper_tables.table7_shard_scaling(rows)
+        paper_tables.table8_serving(rows)
         paper_tables.table9_fault_overhead(rows)
 
     print("name,value,derived")

@@ -10,4 +10,5 @@ dispatches here); ``repro.kernels.ops`` remains the kernel-level wrapper
 layer that owns padding/tiling and selects interpret mode off-TPU.
 """
 from . import ops, ref  # noqa: F401
-from .ops import flash_decode, intac_accum, segment_sum  # noqa: F401
+from .ops import (flash_decode, flash_decode_paged,  # noqa: F401
+                  intac_accum, segment_sum)

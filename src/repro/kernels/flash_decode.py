@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: streaming flash-decode attention (one new token).
+"""Pallas TPU kernels: streaming flash-decode attention (one new token).
 
 This is the JugglePAC pattern applied to the online-softmax accumulator:
 the KV cache is streamed block-by-block through VMEM (blocks = "cycles");
@@ -6,18 +6,33 @@ the running (m, l, acc) triple is the PIS register for the one in-flight
 "set" (the query's attention row), carried in VMEM scratch across grid
 steps; the division by l is the once-per-set finalization.
 
-The cross-*device* half of the decode path (each KV shard producing one
-(m, l, o) partial, combined with a fixed pairwise tree) lives in
-``core.segmented.combine_flash_partials_tree`` — kernel below handles the
+Three entry points share one online-softmax step:
+
+  * ``flash_decode_pallas``          dense contiguous KV, finalized o;
+  * ``flash_decode_partial_pallas``  dense KV, but emits the raw
+    (m, l, o) partial triple instead of finalizing — chunks of the KV
+    stream become independent partials that ``repro.reduce``'s
+    ``FlashAccumulator`` merges in a fixed tree (the cross-chunk /
+    cross-device "state 0" of the decode path);
+  * ``flash_decode_paged_pallas``    paged KV: the cache lives in a
+    shared pool of fixed-size pages and a per-request page table says
+    which physical page backs each logical block.  The table rides in as
+    a scalar-prefetch operand so the Pallas pipeline can schedule the
+    gather DMA ahead of compute (``PrefetchScalarGridSpec``).
+
+The cross-*device* half (each KV shard producing one (m, l, o) partial,
+combined with a fixed pairwise tree) lives in
+``core.segmented.combine_flash_partials_tree`` — kernels below handle the
 within-shard stream.
 
 Layout: one kernel instance handles one (batch, kv-head) pair:
   q    (G, d)    G = query heads sharing this KV head (GQA group)
-  k, v (S, d)    the KV cache shard for this head
+  k, v (S, d)    the KV cache shard for this head (paged: (P, ps, d))
   bias (1, S)    additive mask (0 / -inf): padding, sliding-window, etc.
 Grid: (S / Bs,) sequential; scratch m/l (G, 1), acc (G, d) f32.
 
-Wrapper (ops.flash_decode) vmaps over (batch, kv_heads).
+Wrappers (ops.flash_decode / ops.flash_decode_paged) vmap or loop over
+(batch, kv_heads).
 """
 
 from __future__ import annotations
@@ -32,22 +47,9 @@ from jax.experimental.pallas import tpu as pltpu
 _NEG_INF = -1e30
 
 
-def _flash_decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, sm_scale: float):
-    step = pl.program_id(0)
-    last = pl.num_programs(0) - 1
-
-    @pl.when(step == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    q = q_ref[...].astype(jnp.float32)            # (G, d)
-    k = k_ref[...].astype(jnp.float32)            # (Bs, d)
-    v = v_ref[...].astype(jnp.float32)            # (Bs, d)
-    bias = bias_ref[...].astype(jnp.float32)      # (1, Bs)
-
+def _online_softmax_step(q, k, v, bias, m_ref, l_ref, acc_ref, *,
+                         sm_scale: float):
+    """One KV block through the running (m, l, acc) registers."""
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale + bias
 
     m_prev = m_ref[...]                           # (G, 1)
@@ -60,20 +62,122 @@ def _flash_decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref,
         p, v, preferred_element_type=jnp.float32)
     m_ref[...] = m_new
 
+
+def _init_registers(m_ref, l_ref, acc_ref):
+    m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, sm_scale: float):
+    step = pl.program_id(0)
+    last = pl.num_programs(0) - 1
+
+    @pl.when(step == 0)
+    def _init():
+        _init_registers(m_ref, l_ref, acc_ref)
+
+    _online_softmax_step(q_ref[...].astype(jnp.float32),
+                         k_ref[...].astype(jnp.float32),
+                         v_ref[...].astype(jnp.float32),
+                         bias_ref[...].astype(jnp.float32),
+                         m_ref, l_ref, acc_ref, sm_scale=sm_scale)
+
     @pl.when(step == last)
     def _finalize():
         o_ref[...] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def _flash_decode_partial_kernel(q_ref, k_ref, v_ref, bias_ref,
+                                 m_out, l_out, o_out,
+                                 m_ref, l_ref, acc_ref, *, sm_scale: float):
+    step = pl.program_id(0)
+    last = pl.num_programs(0) - 1
+
+    @pl.when(step == 0)
+    def _init():
+        _init_registers(m_ref, l_ref, acc_ref)
+
+    _online_softmax_step(q_ref[...].astype(jnp.float32),
+                         k_ref[...].astype(jnp.float32),
+                         v_ref[...].astype(jnp.float32),
+                         bias_ref[...].astype(jnp.float32),
+                         m_ref, l_ref, acc_ref, sm_scale=sm_scale)
+
+    @pl.when(step == last)
+    def _emit():
+        # no finalize: the (m, l, o) triple leaves the kernel raw so the
+        # FlashAccumulator can juggle partials from other chunks/shards
+        m_out[...] = m_ref[...]
+        l_out[...] = l_ref[...]
+        o_out[...] = acc_ref[...]
+
+
+def _flash_decode_paged_kernel(pt_ref, q_ref, k_ref, v_ref, bias_ref, o_ref,
+                               m_ref, l_ref, acc_ref, *, sm_scale: float):
+    del pt_ref  # consumed by the BlockSpec index maps (scalar prefetch)
+    step = pl.program_id(0)
+    last = pl.num_programs(0) - 1
+
+    @pl.when(step == 0)
+    def _init():
+        _init_registers(m_ref, l_ref, acc_ref)
+
+    _online_softmax_step(q_ref[...].astype(jnp.float32),
+                         k_ref[0].astype(jnp.float32),   # (1, ps, d) block
+                         v_ref[0].astype(jnp.float32),
+                         bias_ref[...].astype(jnp.float32),
+                         m_ref, l_ref, acc_ref, sm_scale=sm_scale)
+
+    @pl.when(step == last)
+    def _finalize():
+        o_ref[...] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def _check_dense_shapes(q, k, v, bias):
+    if q.ndim != 2 or k.ndim != 2 or v.ndim != 2 or bias.ndim != 2:
+        raise ValueError(
+            "flash_decode_pallas: expected q (G, d), k/v (S, d), "
+            f"bias (1, S); got q {q.shape}, k {k.shape}, v {v.shape}, "
+            f"bias {bias.shape}")
+    if k.shape != v.shape:
+        raise ValueError(
+            f"flash_decode_pallas: k {k.shape} and v {v.shape} must match")
+    if q.shape[1] != k.shape[1]:
+        raise ValueError(
+            f"flash_decode_pallas: head dim mismatch: q has d={q.shape[1]} "
+            f"but k has d={k.shape[1]}")
+    if bias.shape != (1, k.shape[0]):
+        raise ValueError(
+            f"flash_decode_pallas: bias must be (1, S)=(1, {k.shape[0]}); "
+            f"got {bias.shape}")
+
+
+def _pad_kv_stream(k, v, bias, block_kv):
+    """Pad S up to a block multiple; padded keys are masked with -inf bias
+    so they cannot perturb the online softmax."""
+    pad = (-k.shape[0]) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=_NEG_INF)
+    return k, v, bias
 
 
 def flash_decode_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         bias: jnp.ndarray, *, sm_scale: float,
                         block_kv: int = 512,
                         interpret: bool = False) -> jnp.ndarray:
-    """q (G, d), k/v (S, d), bias (1, S) -> (G, d) f32.  S % block_kv == 0."""
+    """q (G, d), k/v (S, d), bias (1, S) -> (G, d) f32.
+
+    Any S is accepted: a non-multiple of ``block_kv`` is padded here with
+    ``-inf`` bias (padding is invisible to the softmax).
+    """
+    _check_dense_shapes(q, k, v, bias)
     g, d = q.shape
-    s_len = k.shape[0]
-    assert s_len % block_kv == 0, "pad in the wrapper"
-    nb = s_len // block_kv
+    k, v, bias = _pad_kv_stream(k, v, bias, block_kv)
+    nb = k.shape[0] // block_kv
     kernel = functools.partial(_flash_decode_kernel, sm_scale=sm_scale)
     return pl.pallas_call(
         kernel,
@@ -93,3 +197,112 @@ def flash_decode_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         ],
         interpret=interpret,
     )(q, k, v, bias)
+
+
+def flash_decode_partial_pallas(q: jnp.ndarray, k: jnp.ndarray,
+                                v: jnp.ndarray, bias: jnp.ndarray, *,
+                                sm_scale: float, block_kv: int = 512,
+                                interpret: bool = False):
+    """Like ``flash_decode_pallas`` but returns the raw partial triple
+    (m (G,), l (G,), o (G, d)) — o *unnormalized* — ready for
+    ``repro.reduce.FlashAccumulator`` / ``flash_partial_combine``."""
+    _check_dense_shapes(q, k, v, bias)
+    g, d = q.shape
+    k, v, bias = _pad_kv_stream(k, v, bias, block_kv)
+    nb = k.shape[0] // block_kv
+    kernel = functools.partial(_flash_decode_partial_kernel,
+                               sm_scale=sm_scale)
+    m, l, o = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((g, d), lambda b: (0, 0)),
+            pl.BlockSpec((block_kv, d), lambda b: (b, 0)),
+            pl.BlockSpec((block_kv, d), lambda b: (b, 0)),
+            pl.BlockSpec((1, block_kv), lambda b: (0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((g, 1), lambda b: (0, 0)),
+            pl.BlockSpec((g, 1), lambda b: (0, 0)),
+            pl.BlockSpec((g, d), lambda b: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)
+    return m[:, 0], l[:, 0], o
+
+
+def flash_decode_paged_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                              v_pages: jnp.ndarray, bias: jnp.ndarray,
+                              page_table: jnp.ndarray, *, sm_scale: float,
+                              interpret: bool = False) -> jnp.ndarray:
+    """Paged-gather flash decode for one (batch, kv-head) pair.
+
+    q (G, d); k_pages/v_pages (P, ps, d) — the shared physical pool;
+    page_table (nb,) int32 — physical page id backing each logical block
+    (entries for logical pages past the request's footprint must point at
+    a valid page, e.g. 0, and be masked via ``bias``); bias (1, nb * ps).
+
+    The page table is a scalar-prefetch operand: the grid walks *logical*
+    pages in order and each step's BlockSpec index map reads
+    ``page_table[b]`` to aim the DMA at the right physical page, so the
+    gather overlaps compute exactly like the dense stream.  With
+    ``block_kv == ps`` and an identity table this is bitwise identical to
+    ``flash_decode_pallas`` — same blocks, same combine order.
+    """
+    if q.ndim != 2 or k_pages.ndim != 3 or v_pages.ndim != 3:
+        raise ValueError(
+            "flash_decode_paged_pallas: expected q (G, d), k_pages/v_pages "
+            f"(P, ps, d); got q {q.shape}, k_pages {k_pages.shape}, "
+            f"v_pages {v_pages.shape}")
+    if k_pages.shape != v_pages.shape:
+        raise ValueError(
+            f"flash_decode_paged_pallas: k_pages {k_pages.shape} and "
+            f"v_pages {v_pages.shape} must match")
+    if q.shape[1] != k_pages.shape[2]:
+        raise ValueError(
+            "flash_decode_paged_pallas: head dim mismatch: q has "
+            f"d={q.shape[1]} but k_pages has d={k_pages.shape[2]}")
+    if page_table.ndim != 1 or page_table.shape[0] == 0:
+        raise ValueError(
+            "flash_decode_paged_pallas: page_table must be a non-empty "
+            f"(nb,) int vector; got shape {page_table.shape}")
+    g, d = q.shape
+    ps = k_pages.shape[1]
+    nb = page_table.shape[0]
+    if bias.shape != (1, nb * ps):
+        raise ValueError(
+            f"flash_decode_paged_pallas: bias must be (1, nb*ps)="
+            f"(1, {nb * ps}); got {bias.shape}")
+    kernel = functools.partial(_flash_decode_paged_kernel, sm_scale=sm_scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((g, d), lambda b, pt: (0, 0)),
+            pl.BlockSpec((1, ps, d), lambda b, pt: (pt[b], 0, 0)),
+            pl.BlockSpec((1, ps, d), lambda b, pt: (pt[b], 0, 0)),
+            pl.BlockSpec((1, ps), lambda b, pt: (0, b)),
+        ],
+        out_specs=pl.BlockSpec((g, d), lambda b, pt: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, d), jnp.float32),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q, k_pages, v_pages, bias)

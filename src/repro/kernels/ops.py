@@ -99,15 +99,21 @@ def intac_accum(values: jnp.ndarray, scale: jnp.ndarray, *,
 
 
 @functools.partial(jax.jit, static_argnames=("sm_scale", "block_kv",
-                                             "interpret"))
+                                             "interpret", "partial_chunks"))
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                  kv_len: jnp.ndarray, *, sm_scale: float,
                  window: Optional[int] = None, block_kv: int = 512,
+                 partial_chunks: Optional[int] = None,
                  interpret: Optional[bool] = None) -> jnp.ndarray:
     """Batched GQA decode attention for one new token.
 
     q (B, H, d); k, v (B, S, K, d) with H = K * G; kv_len (B,) valid lengths.
     ``window``: optional sliding-window size (mixtral-style SWA masking).
+    ``partial_chunks``: split the KV stream into this many chunks, run each
+    as an independent kernel emitting a raw (m, l, o) partial, and combine
+    the partials with ``repro.reduce``'s ``FlashAccumulator`` in a fixed
+    pairwise tree — the single-host rehearsal of the cross-device decode
+    path (each KV shard = one partial).
     Returns (B, H, d) f32.
     """
     interpret = _interpret_default() if interpret is None else interpret
@@ -132,8 +138,81 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     kk = jnp.moveaxis(k, 2, 1)                          # (B, K, S, d)
     vv = jnp.moveaxis(v, 2, 1)
 
+    if partial_chunks is not None and partial_chunks > 1:
+        from repro.reduce import FlashAccumulator, merge_tree
+        nb = sp // block_kv
+        per = -(-nb // partial_chunks)                  # blocks per chunk
+        runp = functools.partial(_fd.flash_decode_partial_pallas,
+                                 sm_scale=sm_scale, block_kv=block_kv,
+                                 interpret=interpret)
+        acc = FlashAccumulator()
+
+        def one(qq, k1, v1, b1):
+            states = []
+            for c in range(0, nb, per):
+                lo, hi = c * block_kv, min(c + per, nb) * block_kv
+                states.append(runp(qq, k1[lo:hi], v1[lo:hi],
+                                   b1[None, lo:hi]))
+            return acc.finalize(merge_tree(acc, states))
+
+        out = jax.vmap(jax.vmap(one))(qg, kk, vv, bias)
+        return out.reshape(b, h, d)
+
     run = functools.partial(_fd.flash_decode_pallas, sm_scale=sm_scale,
                             block_kv=block_kv, interpret=interpret)
     out = jax.vmap(jax.vmap(lambda qq, k1, v1, b1: run(qq, k1, v1, b1[None])))(
         qg, kk, vv, bias)                               # (B, K, G, d)
     return out.reshape(b, h, d)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def flash_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
+                       v_pages: jnp.ndarray, page_tables: jnp.ndarray,
+                       kv_len: jnp.ndarray, *, sm_scale: float,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Paged-gather GQA decode attention for one new token.
+
+    The KV cache lives in a shared pool of fixed-size pages
+    (``serve.PagedKVPool``); each request addresses its logical context
+    through a page table instead of a contiguous slab.
+
+    q (B, H, d); k_pages, v_pages (P, ps, K, d) — the *shared* physical
+    pool (P pages of ps tokens, K kv-heads); page_tables (B, nb) int32,
+    ``FREE_PAGE``-padded (padded entries are clamped to page 0 and masked
+    via the length bias); kv_len (B,) valid lengths.  Returns (B, H, d)
+    f32 — bitwise identical to ``flash_decode`` with ``block_kv=ps`` on
+    the logically-assembled contiguous cache.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    if q.ndim != 3 or k_pages.ndim != 4:
+        raise ValueError(
+            "flash_decode_paged: expected q (B, H, d) and k_pages/v_pages "
+            f"(P, ps, K, d); got q {q.shape}, k_pages {k_pages.shape}")
+    if page_tables.ndim != 2 or page_tables.shape[0] != q.shape[0]:
+        raise ValueError(
+            "flash_decode_paged: page_tables must be (B, nb) matching "
+            f"q's batch {q.shape[0]}; got {page_tables.shape}")
+    b, h, d = q.shape
+    ps, kheads = k_pages.shape[1], k_pages.shape[2]
+    assert h % kheads == 0
+    g = h // kheads
+    nb = page_tables.shape[1]
+    sp = nb * ps
+
+    pos = jnp.arange(sp)[None, :]
+    bias = jnp.where(pos < kv_len[:, None], 0.0, _fd._NEG_INF)  # (B, S)
+    tables = jnp.maximum(page_tables.astype(jnp.int32), 0)      # clamp pads
+
+    qg = q.reshape(b, kheads, g, d)
+    kp = jnp.moveaxis(k_pages, 2, 0)                    # (K, P, ps, d)
+    vp = jnp.moveaxis(v_pages, 2, 0)
+
+    run = functools.partial(_fd.flash_decode_paged_pallas,
+                            sm_scale=sm_scale, interpret=interpret)
+    rows = []
+    for bi in range(b):                 # page tables are per-request: loop,
+        heads = [run(qg[bi, kh], kp[kh], vp[kh], bias[bi][None],
+                     tables[bi])        # don't vmap over prefetch operands
+                 for kh in range(kheads)]
+        rows.append(jnp.stack(heads))                   # (K, G, d)
+    return jnp.stack(rows).reshape(b, h, d)

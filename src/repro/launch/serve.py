@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
         --smoke --requests 4 --new-tokens 16
+
+Pass ``--arrival-gap G`` to drive the continuous-batching path instead
+of the all-at-once wrapper: requests arrive with mean-G-step Poisson
+gaps, admit mid-stream into freed decode slots, and results report
+per-request latency (submission to retirement, queue wait included).
 """
 
 from __future__ import annotations
@@ -25,6 +30,9 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--arrival-gap", type=float, default=0.0,
+                    help="mean Poisson inter-arrival gap in engine steps; "
+                         "0 = submit everything at time zero")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -41,13 +49,22 @@ def main(argv=None):
                     temperature=args.temperature)
             for _ in range(args.requests)]
     t0 = time.time()
-    results = engine.generate(reqs)
+    if args.arrival_gap > 0:
+        t = 0.0
+        for r in reqs:
+            t += float(rng.exponential(args.arrival_gap))
+            engine.submit(r, arrival=t)
+        results = engine.run()
+    else:
+        results = engine.generate(reqs)
     dt = time.time() - t0
     total_new = sum(len(r.tokens) - r.prompt_len for r in results)
     for i, r in enumerate(results):
+        lat = f" latency={r.latency_s * 1e3:.0f}ms" if args.arrival_gap \
+            else ""
         print(f"req{i}: prompt[{r.prompt_len}] -> "
               f"+{len(r.tokens) - r.prompt_len} tokens: "
-              f"{r.tokens[r.prompt_len:][:12]}")
+              f"{r.tokens[r.prompt_len:][:12]}{lat}")
     print(f"{total_new} tokens in {dt:.2f}s "
           f"({total_new / max(dt, 1e-9):.1f} tok/s batched)")
 

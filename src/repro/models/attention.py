@@ -180,34 +180,44 @@ def gqa_apply(params, x, cfg: ModelConfig, *, positions, mode: str = "train",
                 new_cache = KVCache(k=k, v=v,
                                     length=jnp.full((b,), s, jnp.int32))
     elif mode == "decode":
-        # Decode batches run in lockstep: a single shared write index
-        # (length[0]) — standard for batched serving; per-request lengths
-        # still drive the masks.
-        assert cache is not None and s == 1
+        # Decode/extend against a cache.  Each batch row appends its ``s``
+        # new tokens at its OWN ``length[row]`` (continuous-batching slots
+        # hold requests at heterogeneous positions), so writes are per-row
+        # scatters, not one shared dynamic_update_slice.  s == 1 is the
+        # classic decode step; s > 1 is a chunked-prefill extend: the chunk
+        # attends causally to [0, length + qi] per chunk-local query qi.
+        # Out-of-bounds positions (an idle serving slot past max_len) are
+        # dropped rather than clamped.
+        if cache is None:
+            raise ValueError("gqa_apply: mode='decode' needs a cache")
         length = cache.length                    # (B,) tokens already cached
+        rows = jnp.arange(b)[:, None]            # (B, 1)
+        qi = jnp.arange(s, dtype=length.dtype)   # chunk-local query offsets
+        newpos = length[:, None] + qi[None, :]   # (B, s) absolute positions
         if is_ring:
             # Ring (sliding-window) cache: slot j holds the latest absolute
             # position p <= L with p % W == j  =>  p = L - ((L - j) % W).
             w = cache.k.shape[1]
-            idx = length[0] % w
-            ck = jax.lax.dynamic_update_slice(cache.k, k, (0, idx, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache.v, v, (0, idx, 0, 0))
-            t = w
-            j = jnp.arange(t)[None, :]
-            pos_k = length[:, None] - ((length[:, None] - j) % w)
-            valid = pos_k >= 0
+            ck = cache.k.at[rows, newpos % w].set(k, mode="drop")
+            cv = cache.v.at[rows, newpos % w].set(v, mode="drop")
+            j = jnp.arange(w)[None, :]
+            last = length[:, None] + (s - 1)
+            pos_k = last - ((last - j) % w)                  # (B, W)
+            # query qi sees ring positions in (newpos - w, newpos]
+            valid = (pos_k[:, None, :] <= newpos[..., None]) \
+                & (pos_k[:, None, :] > newpos[..., None] - w) \
+                & (pos_k[:, None, :] >= 0)
         else:
-            idx = length[0]
-            ck = jax.lax.dynamic_update_slice(cache.k, k, (0, idx, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache.v, v, (0, idx, 0, 0))
+            ck = cache.k.at[rows, newpos].set(k, mode="drop")
+            cv = cache.v.at[rows, newpos].set(v, mode="drop")
             t = ck.shape[1]
-            j = jnp.arange(t)[None, :]
-            valid = j <= length[:, None]
+            j = jnp.arange(t)[None, None, :]
+            valid = j <= newpos[..., None]                   # (B, s, T)
             if cfg.window is not None:
-                valid &= j > (length[:, None] - cfg.window)
-        mask = jnp.where(valid, 0.0, -1e30)[:, None, :]   # (B, S=1, T)
+                valid &= j > (newpos[..., None] - cfg.window)
+        mask = jnp.where(valid, 0.0, -1e30)               # (B, s, T)
         out = _sdpa(q, ck, cv, mask, sm_scale)
-        new_cache = KVCache(ck, cv, length + 1)
+        new_cache = KVCache(ck, cv, length + s)
     else:
         raise ValueError(mode)
 
@@ -295,13 +305,18 @@ def mla_apply(params, x, cfg: ModelConfig, *, positions, mode: str = "train",
             new_cache = MLACache(c_kv=c_sh, k_rope=kr_sh,
                                  length=jnp.full((b,), s, jnp.int32))
     elif mode == "decode":
-        assert cache is not None and s == 1
+        # Per-row append (continuous-batching slots sit at heterogeneous
+        # lengths); s > 1 is a chunked-prefill extend with chunk-causal
+        # masking, mirroring the GQA decode/extend branch.
+        if cache is None:
+            raise ValueError("mla_apply: mode='decode' needs a cache")
         length = cache.length
-        idx = length[0]
-        cc = jax.lax.dynamic_update_slice(cache.c_kv, c, (0, idx, 0))
-        ckr = jax.lax.dynamic_update_slice(cache.k_rope, kr, (0, idx, 0))
+        rows = jnp.arange(b)[:, None]
+        newpos = length[:, None] + jnp.arange(s, dtype=length.dtype)[None, :]
+        cc = cache.c_kv.at[rows, newpos].set(c, mode="drop")
+        ckr = cache.k_rope.at[rows, newpos].set(kr, mode="drop")
         t = cc.shape[1]
-        # absorb W_uk into the query: q_eff (B,1,H,r)
+        # absorb W_uk into the query: q_eff (B,s,H,r)
         wuk = params["wuk"].reshape(r, h, nd)
         q_eff = jnp.einsum("bshd,rhd->bshr", qn.astype(jnp.float32),
                            wuk.astype(jnp.float32))
@@ -309,13 +324,13 @@ def mla_apply(params, x, cfg: ModelConfig, *, positions, mode: str = "train",
                              cc.astype(jnp.float32))
                   + jnp.einsum("bshd,btd->bhst", qr.astype(jnp.float32),
                                ckr.astype(jnp.float32))) * sm_scale
-        valid = jnp.arange(t)[None, :] <= length[:, None]
-        scores = scores + jnp.where(valid, 0.0, -1e30)[:, None, None, :]
+        valid = jnp.arange(t)[None, None, :] <= newpos[..., None]  # (B,s,t)
+        scores = scores + jnp.where(valid, 0.0, -1e30)[:, None, :, :]
         p = jax.nn.softmax(scores, axis=-1)
         o_lat = jnp.einsum("bhst,btr->bshr", p, cc.astype(jnp.float32))
         wuv = params["wuv"].reshape(r, h, vd)
         out = jnp.einsum("bshr,rhd->bshd", o_lat, wuv.astype(jnp.float32))
-        new_cache = MLACache(cc, ckr, length + 1)
+        new_cache = MLACache(cc, ckr, length + s)
     else:
         raise ValueError(mode)
 

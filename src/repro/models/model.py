@@ -240,7 +240,11 @@ def _run_stack(params_blocks, cfg: ModelConfig, x, *, positions, mode,
 
 
 def _default_positions(cfg: ModelConfig, bsz, s, offset=0):
-    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+    """``offset`` is a scalar (shared position) or a (B,) array — serving
+    slots in a continuous batch sit at per-request positions."""
+    off = jnp.asarray(offset, jnp.int32)
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :]
+    pos = pos + (off[:, None] if off.ndim == 1 else off)
     pos = jnp.broadcast_to(pos, (bsz, s))
     if cfg.mrope:
         pos = jnp.broadcast_to(pos[..., None], (bsz, s, 3))
@@ -455,9 +459,15 @@ def pad_caches_to(cfg: ModelConfig, caches, max_len: int):
 
 def decode_step(params, cfg: ModelConfig, token, caches, position, *,
                 enc_out=None, moe_impl: str = "capacity"):
-    """One serving step: token (B, 1) -> (logits (B,1,V), new caches)."""
-    bsz = token.shape[0]
-    positions = _default_positions(cfg, bsz, 1, position)
+    """One serving step: token (B, 1) -> (logits (B,1,V), new caches).
+
+    ``position`` may be a scalar (lock-step batch) or a (B,) array of
+    per-request positions (continuous batching: each slot appends at its
+    own cache length).  ``token`` with s > 1 columns is a chunked-prefill
+    extend for attention caches (SSM states remain one-token-at-a-time).
+    """
+    bsz, s = token.shape[0], token.shape[1]
+    positions = _default_positions(cfg, bsz, s, position)
     logits, new_caches, _ = forward(params, cfg, tokens=token,
                                     positions=positions, mode="decode",
                                     caches=caches, enc_out=enc_out,

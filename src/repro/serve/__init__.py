@@ -1,0 +1,9 @@
+"""Continuous-batching serving subsystem (scheduler, paged KV pool,
+engine) — the paper's juggling act at request granularity."""
+
+from .engine import Engine, Request, Result  # noqa: F401
+from .kv_pool import FREE_PAGE, PagedKVPool, PoolExhausted  # noqa: F401
+from .scheduler import Scheduler, TrackedRequest  # noqa: F401
+
+__all__ = ["Engine", "Request", "Result", "Scheduler", "TrackedRequest",
+           "PagedKVPool", "PoolExhausted", "FREE_PAGE"]

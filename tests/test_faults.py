@@ -339,3 +339,56 @@ def test_elastic_resume_is_bitwise_2_to_8_devices(tmp_path):
                        capture_output=True, text=True, env=env, timeout=600)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "ELASTIC 1 1" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# serving faults: a request killed mid-decode
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_mid_decode_frees_pages_and_isolates_survivors():
+    """Kill a request mid-decode: its KV pages return to the pool at the
+    moment of cancellation (not at drain), a 'cancelled' result still
+    arrives in submission order, and the survivors' greedy outputs are
+    bitwise identical to a run where the victim never existed (per-slot
+    isolation: a dying batchmate cannot perturb anyone's stream)."""
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.serve import Engine, Request
+
+    cfg = get_smoke_config("stablelm-1.6b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_len=96, seed=0, max_batch=4)
+
+    survivors = [Request(prompt=[5, 6, 7], max_new_tokens=6),
+                 Request(prompt=[9, 10], max_new_tokens=8),
+                 Request(prompt=[2, 3, 4, 5], max_new_tokens=5)]
+    victim = Request(prompt=[30, 31, 32], max_new_tokens=20)
+
+    rids = [eng.submit(r) for r in survivors + [victim]]
+    victim_rid = rids[-1]
+    victim_pages = eng.pool.pages_for(
+        min(len(victim.prompt) + victim.max_new_tokens, eng.max_len))
+    seen = {}
+
+    def kill(engine, step):
+        if step == 3:      # victim is mid-decode (admitted at step 0)
+            assert engine.scheduler.tracked(victim_rid).state == "decode"
+            before = engine.pool.free_pages
+            assert engine.cancel(victim_rid)
+            seen["freed"] = engine.pool.free_pages - before
+            seen["tokens"] = len(engine.scheduler.tracked(victim_rid).out)
+
+    results = eng.run(on_step=kill)
+    assert seen["freed"] == victim_pages          # pages back immediately
+    assert [r.rid for r in results] == rids       # in-order incl. victim
+    vres = results[-1]
+    assert vres.finish_reason == "cancelled"
+    assert len(vres.tokens) == seen["tokens"]     # partial output kept
+    assert eng.pool.free_pages == eng.pool.num_pages
+
+    clean = eng.generate(survivors)               # victim never existed
+    for got, ref_ in zip(results, clean):
+        assert got.tokens == ref_.tokens, \
+            "cancellation perturbed a surviving request's stream"
+        assert got.finish_reason == ref_.finish_reason

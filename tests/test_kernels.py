@@ -132,3 +132,106 @@ def test_flash_decode_block_invariance():
     a = ops.flash_decode(q, kk, vv, kvlen, sm_scale=0.125, block_kv=128)
     b = ops.flash_decode(q, kk, vv, kvlen, sm_scale=0.125, block_kv=512)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash decode: padding contract, paged gather, partial streams
+# ---------------------------------------------------------------------------
+
+
+def test_flash_decode_pallas_pads_non_multiple_s():
+    """The kernel wrapper pads a non-multiple S with -inf bias instead of
+    asserting — padded keys are invisible to the online softmax."""
+    from repro.kernels.flash_decode import flash_decode_pallas
+    rng = np.random.RandomState(11)
+    g, d, s = 4, 32, 37                    # 37 % 16 != 0
+    q = jnp.asarray(rng.randn(g, d).astype(np.float32))
+    k = jnp.asarray(rng.randn(s, d).astype(np.float32))
+    v = jnp.asarray(rng.randn(s, d).astype(np.float32))
+    bias = jnp.zeros((1, s), jnp.float32)
+    out = flash_decode_pallas(q, k, v, bias, sm_scale=0.125, block_kv=16,
+                              interpret=True)
+    expect = ref.flash_decode_ref(q, k, v, bias, sm_scale=0.125)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5)
+
+
+def test_flash_decode_pallas_rejects_bad_shapes():
+    from repro.kernels.flash_decode import flash_decode_pallas
+    q = jnp.zeros((4, 32))
+    k = jnp.zeros((64, 32))
+    bias = jnp.zeros((1, 64))
+    with pytest.raises(ValueError, match="expected q"):
+        flash_decode_pallas(q[0], k, k, bias, sm_scale=1.0)
+    with pytest.raises(ValueError, match="must match"):
+        flash_decode_pallas(q, k, jnp.zeros((32, 32)), bias, sm_scale=1.0)
+    with pytest.raises(ValueError, match="head dim"):
+        flash_decode_pallas(jnp.zeros((4, 16)), k, k, bias, sm_scale=1.0)
+    with pytest.raises(ValueError, match="bias"):
+        flash_decode_pallas(q, k, k, jnp.zeros((1, 12)), sm_scale=1.0)
+
+
+def test_flash_decode_paged_matches_dense_bitwise():
+    """The paged-gather kernel with block_kv == page_size walks the same
+    blocks in the same order as the dense kernel — outputs are bitwise
+    equal on the logically-assembled cache, even with a shuffled physical
+    page layout straight out of PagedKVPool."""
+    from repro.serve import PagedKVPool
+    rng = np.random.RandomState(3)
+    b, h, kh, d, ps, nb = 3, 8, 2, 32, 16, 4
+    s = nb * ps
+    q = jnp.asarray(rng.randn(b, h, d).astype(np.float32))
+    k = jnp.asarray(rng.randn(b, s, kh, d).astype(np.float32))
+    v = jnp.asarray(rng.randn(b, s, kh, d).astype(np.float32))
+    kv_len = jnp.asarray([5, 37, 64], jnp.int32)
+    dense = ops.flash_decode(q, k, v, kv_len, sm_scale=0.125, block_kv=ps)
+
+    # interleaved alloc/free so physical pages land in a non-trivial order
+    pool = PagedKVPool(num_pages=b * nb + 2, page_size=ps)
+    pool.alloc(99, 2 * ps)                 # churn
+    tables = []
+    for bi in range(b):
+        pool.alloc(bi, int(kv_len[bi]))
+        if bi == 0:
+            pool.free(99)                  # holes for later requests
+        tables.append(pool.page_table(bi, max_pages=nb))
+    kp = np.zeros((pool.num_pages, ps, kh, d), np.float32)
+    vp = np.zeros((pool.num_pages, ps, kh, d), np.float32)
+    for bi in range(b):
+        for j, pg in enumerate(pool.pages_of(bi)):
+            kp[pg] = np.asarray(k[bi, j * ps:(j + 1) * ps])
+            vp[pg] = np.asarray(v[bi, j * ps:(j + 1) * ps])
+
+    paged = ops.flash_decode_paged(q, jnp.asarray(kp), jnp.asarray(vp),
+                                   jnp.asarray(np.stack(tables)), kv_len,
+                                   sm_scale=0.125)
+    assert bool(jnp.all(dense == paged)), "paged gather diverged bitwise"
+
+
+def test_flash_decode_paged_rejects_bad_shapes():
+    q = jnp.zeros((2, 4, 16))
+    kp = jnp.zeros((8, 16, 2, 16))
+    with pytest.raises(ValueError, match="page_tables"):
+        ops.flash_decode_paged(q, kp, kp, jnp.zeros((3, 4), jnp.int32),
+                               jnp.asarray([1, 1]), sm_scale=1.0)
+    with pytest.raises(ValueError, match="expected q"):
+        ops.flash_decode_paged(q[0], kp, kp, jnp.zeros((2, 4), jnp.int32),
+                               jnp.asarray([1, 1]), sm_scale=1.0)
+
+
+def test_flash_decode_partial_chunks_matches_single_stream():
+    """partial_chunks=k routes the KV stream through k independent
+    (m, l, o) partials merged by repro.reduce's FlashAccumulator tree —
+    same math as the fused stream, to fp tolerance."""
+    rng = np.random.RandomState(7)
+    b, h, kh, d, s = 2, 4, 2, 32, 96
+    q = jnp.asarray(rng.randn(b, h, d).astype(np.float32))
+    k = jnp.asarray(rng.randn(b, s, kh, d).astype(np.float32))
+    v = jnp.asarray(rng.randn(b, s, kh, d).astype(np.float32))
+    kv_len = jnp.asarray([96, 41], jnp.int32)
+    fused = ops.flash_decode(q, k, v, kv_len, sm_scale=0.125, block_kv=16)
+    for chunks in (2, 3):
+        split = ops.flash_decode(q, k, v, kv_len, sm_scale=0.125,
+                                 block_kv=16, partial_chunks=chunks)
+        np.testing.assert_allclose(np.asarray(split), np.asarray(fused),
+                                   atol=1e-5)

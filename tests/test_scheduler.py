@@ -1,0 +1,171 @@
+"""Units for the serving control plane: PagedKVPool + Scheduler.
+
+Host-side only (no jax): the pool's alloc/extend/free bookkeeping and the
+scheduler's arrival queue, FIFO admission gated on pages, and reorder
+buffer (in-order delivery regardless of finish order).
+"""
+
+import pytest
+
+from repro.serve import (FREE_PAGE, PagedKVPool, PoolExhausted, Scheduler)
+
+
+# ---------------------------------------------------------------------------
+# PagedKVPool
+# ---------------------------------------------------------------------------
+
+
+def test_pool_pages_for_rounds_up():
+    pool = PagedKVPool(num_pages=8, page_size=16)
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(16) == 1
+    assert pool.pages_for(17) == 2
+    assert pool.pages_for(0) == 1          # every request owns >= 1 page
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = PagedKVPool(num_pages=8, page_size=16)
+    pages = pool.alloc(0, 40)              # 3 pages
+    assert pages == [0, 1, 2]              # deterministic low-first ids
+    assert pool.free_pages == 5
+    assert pool.live_requests == 1
+    assert pool.owns(0) and not pool.owns(1)
+    assert pool.free(0) == 3
+    assert pool.free_pages == 8
+    assert pool.free(0) == 0               # double-free is a no-op
+
+
+def test_pool_extend_grows_reservation():
+    pool = PagedKVPool(num_pages=4, page_size=16)
+    pool.alloc(7, 16)                      # 1 page
+    assert pool.extend(7, 20) == [1]       # grows to 2 total
+    assert pool.extend(7, 20) == []        # already covered
+    assert pool.pages_of(7) == [0, 1]
+    with pytest.raises(KeyError):
+        pool.extend(99, 16)
+
+
+def test_pool_exhaustion_and_double_alloc():
+    pool = PagedKVPool(num_pages=2, page_size=16)
+    pool.alloc(0, 32)
+    assert not pool.can_alloc(1)
+    with pytest.raises(PoolExhausted, match="needs 1 pages"):
+        pool.alloc(1, 1)
+    with pytest.raises(ValueError, match="already holds"):
+        pool.alloc(0, 1)
+
+
+def test_pool_page_table_padding():
+    pool = PagedKVPool(num_pages=8, page_size=16)
+    pool.alloc(3, 33)                      # 3 pages
+    table = pool.page_table(3, max_pages=6)
+    assert table.tolist() == [0, 1, 2, FREE_PAGE, FREE_PAGE, FREE_PAGE]
+    assert table.dtype.name == "int32"
+    with pytest.raises(ValueError, match="max_pages"):
+        pool.page_table(3, max_pages=2)
+    assert pool.page_table(99).tolist() == []   # unknown rid: empty table
+
+
+def test_pool_recycles_pages():
+    pool = PagedKVPool(num_pages=4, page_size=16)
+    a = pool.alloc(0, 32)
+    pool.free(0)
+    b = pool.alloc(1, 32)
+    assert a == b                          # LIFO recycling, hot pages reused
+
+
+def test_pool_rejects_bad_sizes():
+    with pytest.raises(ValueError, match="positive"):
+        PagedKVPool(num_pages=0, page_size=16)
+    with pytest.raises(ValueError, match="positive"):
+        PagedKVPool(num_pages=4, page_size=0)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+
+def _sched(max_slots=2, num_pages=8, page_size=16):
+    return Scheduler(max_slots, PagedKVPool(num_pages, page_size))
+
+
+def test_scheduler_arrival_order_admission():
+    s = _sched(max_slots=2)
+    r0 = s.submit("a", arrival=5.0, need_tokens=16)
+    r1 = s.submit("b", arrival=1.0, need_tokens=16)
+    r2 = s.submit("c", arrival=3.0, need_tokens=16)
+    assert (r0, r1, r2) == (0, 1, 2)
+    assert s.advance(0.0) == []            # nothing has arrived yet
+    assert s.next_arrival() == 1.0
+    s.advance(4.0)                         # b then c arrive; a still pending
+    admitted = s.admit()
+    assert [t.rid for t in admitted] == [1, 2]   # arrival order, not rid
+    assert [t.slot for t in admitted] == [0, 1]
+    assert s.admit() == []                 # slots full
+    s.advance(10.0)
+    assert s.admit() == []                 # a arrived but no slot
+
+
+def test_scheduler_pool_gates_admission_fifo():
+    """Head-of-line blocking: a big request at the queue head must not be
+    overtaken by a small one behind it (admission order == arrival order)."""
+    s = _sched(max_slots=4, num_pages=4, page_size=16)
+    s.submit("big", arrival=0.0, need_tokens=64)     # 4 pages
+    s.submit("small", arrival=1.0, need_tokens=16)   # 1 page
+    s.advance(2.0)
+    first = s.admit()
+    assert [t.rid for t in first] == [0]             # big takes whole pool
+    assert s.admit() == []                           # small blocked behind
+    tr = s.tracked(0)
+    s.finish(tr, "done-big")
+    assert [t.rid for t in s.admit()] == [1]
+
+
+def test_scheduler_reorder_buffer_delivers_in_order():
+    s = _sched(max_slots=3)
+    for name in ("a", "b", "c"):
+        s.submit(name, arrival=0.0, need_tokens=16)
+    s.advance(0.0)
+    s.admit()
+    # finish out of order: c, a, then b
+    s.finish(s.tracked(2), "rc")
+    assert s.pop_ready() == []             # 0 and 1 still running
+    s.finish(s.tracked(0), "ra")
+    assert s.pop_ready() == ["ra"]         # 1 still blocks 2
+    s.finish(s.tracked(1), "rb")
+    assert s.pop_ready() == ["rb", "rc"]
+    assert not s.has_work()
+    assert s.undelivered == 0
+
+
+def test_scheduler_finish_releases_slot_and_pages():
+    s = _sched(max_slots=1, num_pages=2, page_size=16)
+    s.submit("a", arrival=0.0, need_tokens=32)
+    s.advance(0.0)
+    s.admit()
+    assert s.pool.free_pages == 0
+    tr = s.tracked(0)
+    s.finish(tr, "ra", reason="stop")
+    assert tr.state == "done"
+    assert tr.slot is None
+    assert s.slots == [None]
+    assert s.pool.free_pages == 2
+
+
+def test_scheduler_rejects_request_larger_than_pool():
+    s = _sched(max_slots=2, num_pages=2, page_size=16)
+    with pytest.raises(ValueError, match="raise num_pages"):
+        s.submit("huge", need_tokens=100)
+
+
+def test_scheduler_in_state_slot_order():
+    s = _sched(max_slots=3)
+    for name in ("a", "b"):
+        s.submit(name, arrival=0.0, need_tokens=16)
+    s.advance(0.0)
+    s.admit()
+    assert [t.rid for t in s.in_state("prefill")] == [0, 1]
+    s.tracked(1).state = "decode"
+    assert [t.rid for t in s.in_state("prefill")] == [0]
+    assert [t.rid for t in s.in_state("decode")] == [1]

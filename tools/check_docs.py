@@ -58,6 +58,12 @@ REQUIRED_SYMBOLS = [
     "repro.reduce.elastic_reduce_mean",
     "repro.ckpt.checkpoint.CheckpointError",
     "repro.ckpt.checkpoint.restore_latest_valid",
+    # the serving surface (docs/serving.md): continuous batching, paged
+    # KV admission, and the paged-gather decode kernel
+    "repro.serve.engine.Engine",
+    "repro.serve.scheduler.Scheduler",
+    "repro.serve.kv_pool.PagedKVPool",
+    "repro.kernels.ops.flash_decode_paged",
 ]
 
 
