@@ -187,6 +187,57 @@ def to_markdown(rows) -> str:
     return "".join(out)
 
 
+def reduce_program_table(shapes=((512, 128, 64), (512, 128, 1024))):
+    """Analytic roofline of the staged reduce block-program.
+
+    For each (block_size, d, num_segments) shape and every registered
+    accuracy policy, plan the staged program (``repro.reduce
+    .plan_program``) and turn its declared per-block stage costs into
+    roofline times: a stage takes ``max(bytes / HBM_BW, flops /
+    PEAK_FLOPS)``.  Two derived columns quantify the two pipeline
+    decisions this repo makes:
+
+      * ``overlap_speedup`` — serial stage sum over max stage time: what
+        double-buffering the gather against the carry update is worth
+        when the stages are balanced (the JugglePAC overlap, at block
+        granularity);
+      * ``contrib`` — the planned gather form; at large ``num_segments``
+        the integer tiers switch to the lane-parallel scatter because
+        the one-hot dot's B*S*W flops would make the *memory-bound*
+        stage compute-bound.
+
+    Pure analysis — no arrays move; safe in any CI job.  The smoke
+    harness (benchmarks/run.py --smoke) writes this table to
+    ``experiments/roofline/reduce_smoke.json``.
+    """
+    from repro.reduce import get_policy, plan_program
+    from repro.reduce.policy import POLICIES
+
+    rows = []
+    for block_size, d, s in shapes:
+        for name in sorted(POLICIES):
+            pol = get_policy(name)
+            w = pol.domain_width(d)
+            prog = plan_program(pol, num_segments=s, domain_width=w,
+                                block_size=block_size)
+            stages = {}
+            for st in prog.stages:
+                stages[st.name] = {
+                    "bytes": st.bytes, "flops": st.flops,
+                    "bound": st.bound,
+                    "s": max(st.bytes / HBM_BW, st.flops / PEAK_FLOPS)}
+            serial = sum(v["s"] for v in stages.values())
+            pipelined = max(v["s"] for v in stages.values())
+            rows.append({
+                "policy": name, "contrib": prog.contrib,
+                "block_size": block_size, "d": d, "num_segments": s,
+                "domain_width": w, "stages": stages,
+                "serial_s": serial, "pipelined_s": pipelined,
+                "overlap_speedup": serial / pipelined if pipelined else 1.0,
+            })
+    return rows
+
+
 def to_csv(rows) -> str:
     cols = ("arch", "shape", "kind", "flops", "bytes_floor", "bytes_hlo",
             "collective_bytes", "compute_s", "memory_s", "memory_hlo_s",

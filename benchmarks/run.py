@@ -28,6 +28,14 @@ simulated CPU devices jitters several-fold run to run, so the time gate
 catches order-of-magnitude hot-path regressions, not 20% ones.  After an
 intentional change, refresh the file with ``--write-baseline`` and
 commit it.
+
+``--check-baseline`` additionally enforces host-speed-independent
+*ordering* invariants (``sanity_checks``): the fast tier strictly
+cheaper than exact2 in table6, and table7 shard scaling not inverse
+(shardN <= shard1 x ``SHARD_MONOTONE_TOL``).  Every ``--smoke`` run also
+emits the staged block-program's analytic roofline to
+``experiments/roofline/reduce_smoke.json`` (see
+``roofline.reduce_program_table``).
 """
 
 from __future__ import annotations
@@ -49,6 +57,51 @@ REGRESSION_ATOL = 1e-12
 #: timings on simulated devices jitter several-fold, so the time gate is
 #: an order-of-magnitude tripwire, not a 20% one
 TIME_NOISE_FACTOR = 4.0
+#: table7 shard-scaling ratchet: time at N shards may exceed the 1-shard
+#: time by at most this factor.  The real claim is "adding shards must
+#: not make the reduction slower" — before inputs were pre-sharded and
+#: carry merges fused, shard8 ran ~9x shard1; what remains at smoke
+#: sizes is the per-device dispatch floor of simulating 8 devices on one
+#: CPU core (~1.7x on the fast tier, whose whole reduction is sub-ms),
+#: so the gate sits above that floor but far below the old pathology
+SHARD_MONOTONE_TOL = 2.5
+
+
+def sanity_checks(rows) -> list:
+    """Relative-ordering invariants the baseline's per-row gates cannot
+    see; return failure strings.
+
+    These are *shape* claims about the current run, independent of host
+    speed: the fast tier must actually be the cheap one (a fast tier
+    slower than the all-int32 exact2 carry means the timing harness or
+    the fast path itself regressed — the old async-dispatch mean once
+    reported exactly that, 6421us vs 224us), and shard scaling must not
+    be inverse (shardN beyond ``SHARD_MONOTONE_TOL`` x shard1 means
+    per-call resharding or per-component collective overhead crept back
+    into the distributed path).
+    """
+    current = {name: val for name, val, _ in rows}
+    failures = []
+    fast = current.get("table6_reduce_fast_us")
+    ex2 = current.get("table6_reduce_exact2_us")
+    if fast is not None and ex2 is not None and fast >= ex2:
+        failures.append(
+            f"table6_reduce_fast_us ({fast:.1f}us) >= "
+            f"table6_reduce_exact2_us ({ex2:.1f}us): the fast tier must "
+            f"be cheaper than the 4-component integer carry")
+    for pol in ("fast", "exact2"):
+        s1 = current.get(f"table7_{pol}_shard1_us")
+        if s1 is None:
+            continue
+        prefix = f"table7_{pol}_shard"
+        for name, val in current.items():
+            if (name.startswith(prefix) and name.endswith("_us")
+                    and name != f"{prefix}1_us"
+                    and val > s1 * SHARD_MONOTONE_TOL):
+                failures.append(
+                    f"{name}: {val:.1f}us > shard1 {s1:.1f}us x "
+                    f"{SHARD_MONOTONE_TOL} (inverse shard scaling)")
+    return failures
 
 
 def check_baseline(rows, baseline: dict) -> list:
@@ -131,6 +184,17 @@ def main(argv=None) -> None:
     for name, val, derived in rows:
         print(f"{name},{val:.6g},{derived}")
 
+    if args.smoke:
+        # the staged block-program's analytic roofline rides along with
+        # every smoke run as a JSON artifact (pure analysis, no arrays)
+        from benchmarks import roofline
+        art_dir = Path("experiments/roofline")
+        art_dir.mkdir(parents=True, exist_ok=True)
+        rrows = roofline.reduce_program_table()
+        art = art_dir / "reduce_smoke.json"
+        art.write_text(json.dumps(rrows, indent=2) + "\n")
+        print(f"roofline: wrote {len(rrows)} reduce-program rows to {art}")
+
     if args.write_baseline:
         BASELINE_PATH.write_text(json.dumps(
             {name: val for name, val, _ in rows}, indent=2,
@@ -142,7 +206,7 @@ def main(argv=None) -> None:
                   f"--write-baseline and commit it")
             sys.exit(1)
         baseline = json.loads(BASELINE_PATH.read_text())
-        failures = check_baseline(rows, baseline)
+        failures = check_baseline(rows, baseline) + sanity_checks(rows)
         if failures:
             print(f"baseline: {len(failures)} regression(s) vs "
                   f"{BASELINE_PATH.name}:")

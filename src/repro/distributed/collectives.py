@@ -27,6 +27,16 @@ tricks:
   3. **Hierarchical reduction** — 'data' (in-pod ICI) first, then 'pod'
      (cross-pod DCI), matching the physical topology.
 
+  4. **Fused merge collectives** — every cross-device merge on this path
+     is batched per dtype rather than issued per component: the fast-tier
+     gradient tree fuses all leaves into one psum per mesh axis
+     (``collective_mean_tree``), the exact2 three-limb merge ships
+     [hi | lo | residual-digits] as a single int32 psum
+     (``core.intac.limb3_merge_across``), and policy-carry merges go
+     through ``reduce.policy.fused_psum``.  psum is elementwise, so the
+     fusion is bitwise invisible — it only removes per-collective latency
+     floors, which dominate once the per-shard kernel tail shrinks.
+
 ``make_elastic_train_step`` is the topology-elastic variant: gradients
 and loss cross the device boundary only through
 ``repro.reduce.elastic_reduce_mean`` under a bitwise policy, and the

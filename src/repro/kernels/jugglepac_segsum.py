@@ -2,11 +2,20 @@
 
 The circuit's streaming schedule, mapped to the TPU grid:
 
-  * the serial 1-value/cycle input bus  ->  one (B, D) VMEM tile per grid step
-    (TPU grid steps execute sequentially on a core, so the stream order is
-    preserved — "cycles" become grid steps);
-  * FSM state 1 (pair raw inputs)       ->  the intra-tile reduction, expressed
-    as a one-hot matmul so it runs on the MXU: contrib = onehot(ids)^T @ vals;
+  * the serial 1-value/cycle input bus  ->  one (K*B, D) VMEM supertile per
+    grid step holding K consecutive schedule blocks (TPU grid steps execute
+    sequentially on a core, so the stream order is preserved — "cycles"
+    become grid steps);
+  * the paper's back-to-back overlap   ->  double buffering at two levels:
+    Pallas's automatic grid pipelining copies supertile i+1 HBM->VMEM while
+    the kernel body runs supertile i, and *inside* the body the loop is
+    software-pipelined — block j+1's (ids, vals) tiles are loaded before
+    ``policy.update`` folds block j, so the gather stage of the next block
+    overlaps the compute stage of the current one (the JugglePAC overlap,
+    in-kernel);
+  * FSM state 1 (pair raw inputs)       ->  the intra-tile reduction — the
+    staged program's contrib stage: the one-hot MXU matmul, or the
+    PhasedAccu lane-parallel scatter when the program plans it;
   * the PIS register file               ->  the policy's carry tuple — (S, D)
     tiles resident in VMEM across grid steps (same output block revisited),
     addressed by segment label exactly like the PIS registers are addressed
@@ -14,17 +23,20 @@ The circuit's streaming schedule, mapped to the TPU grid:
   * in-order emission                   ->  row s of the output is segment s.
 
 There is exactly ONE kernel body for the block schedule:
-``_segsum_policy_kernel`` executes ``policy.contrib`` + ``policy.update``
-— the same pure jnp ops the ref/blocked backends thread — against the
-carry refs, so the cross-backend bitwise contract holds for every policy
-(fast / compensated f32 carries, exact single-limb, exact2 limbs +
-residual-digit planes, procrastinate bins) by construction rather
-than by duplicated code.
+``_segsum_policy_kernel`` executes the staged contrib
+(``repro.reduce.program.block_contrib`` — the very helper ref/blocked
+call) + ``policy.update`` — so the cross-backend bitwise contract holds
+for every policy (fast / compensated f32 carries, exact single-limb,
+exact2 limbs + residual-digit planes, procrastinate bins) by construction
+rather than by duplicated code.  Multi-block supertiles change only *when*
+tiles move, never the fold order: block j still folds before block j+1,
+so results are bitwise identical at any ``blocks_per_step``.
 
-VMEM budget per step: B*D (values) + B (ids) + carry_len*S*D floats —
+VMEM budget per step: K*B*D (values) + K*B (ids) + carry_len*S*D floats —
 the callers (ops.segment_sum, the reduce pallas backend) tile the label
-space when the carry would exceed the budget, the software analogue of
-"2–8 PIS registers, not a BRAM".
+space when the carry would exceed the budget, and ``blocks_per_step_for``
+sizes K so the double-buffered input window stays modest (the software
+analogue of "2–8 PIS registers, not a BRAM").
 """
 
 from __future__ import annotations
@@ -35,16 +47,42 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.reduce.backends import OUT_OF_RANGE_LABEL
+from repro.reduce.program import block_contrib
+
+#: bytes of f32 input tiles one grid step may hold; with Pallas's grid
+#: pipelining double-buffering the window, the live footprint is 2x this
+_INPUT_WINDOW_BYTES = 1 << 19           # 512 KiB
+
+
+def blocks_per_step_for(block_rows: int, width: int) -> int:
+    """Schedule blocks per grid step (the supertile depth K).
+
+    Sized so the (K*B, W) values + (K*B, 1) ids input window fits
+    ``_INPUT_WINDOW_BYTES`` — deep enough that the per-grid-step copy
+    amortizes over K contrib+update stages, shallow enough that double
+    buffering the window stays far from the VMEM the carry needs.
+    """
+    per_block = block_rows * (width + 1) * 4
+    return int(max(1, min(8, _INPUT_WINDOW_BYTES // max(per_block, 1))))
+
 
 def _segsum_policy_kernel(ids_ref, vals_ref, *out_refs, num_segments: int,
-                          seg_offset: int, policy):
+                          seg_offset: int, policy, program,
+                          block_rows: int, blocks_per_step: int):
     """The streaming schedule with the accuracy-policy carry baked in.
 
-    ``policy.contrib`` and ``policy.update`` are traced straight into the
-    grid loop — the one canonical op sequence per policy; the
+    The staged contrib (``block_contrib`` — dot or lane form per the
+    planned program) and ``policy.update`` are traced straight into the
+    grid loop — the one canonical op sequence per (policy, program); the
     cross-backend bitwise contract depends on these being the very
     functions the blocked/ref backends call.  Policies executed here must
     zero-init their carry.
+
+    The body is software-pipelined over the supertile's blocks: tile j+1
+    loads from the VMEM supertile before ``update`` folds tile j, telling
+    the compiler the next gather never waits on the current fold.  The
+    fold order is untouched — bitwise identical at any supertile depth.
     """
     step = pl.program_id(0)
 
@@ -53,16 +91,25 @@ def _segsum_policy_kernel(ids_ref, vals_ref, *out_refs, num_segments: int,
         for r in out_refs:
             r[...] = jnp.zeros_like(r)
 
-    ids = ids_ref[...]                              # (B, 1) int32
-    vals = vals_ref[...]                            # (B, W) domain dtype
-    labels = jax.lax.broadcasted_iota(
-        jnp.int32, (1, num_segments), 1) + seg_offset
-    onehot = ids == labels                          # (B, S) bool
-    # state-1 pairing of the whole tile at once, on the MXU (the policy
-    # owns the dot(s): exact2 runs one int32 dot per block over its
-    # quantized + residual-digit planes):
-    contrib = policy.contrib(onehot, vals)
-    carry = policy.update(tuple(r[...] for r in out_refs), contrib)
+    def load(j):
+        rows = pl.dslice(j * block_rows, block_rows)
+        return ids_ref[rows, :], vals_ref[rows, :]
+
+    carry = tuple(r[...] for r in out_refs)
+    nxt = load(0)
+    for j in range(blocks_per_step):
+        ids, vals = nxt                             # (B, 1), (B, W)
+        if j + 1 < blocks_per_step:
+            nxt = load(j + 1)       # prefetch while this block folds
+        contrib = block_contrib(vals, ids.reshape(block_rows),
+                                num_segments, policy, program,
+                                seg_offset=seg_offset)
+        carry = policy.update(carry, contrib)
+        # pin the fold boundary: with the supertile loop unrolled into one
+        # computation, XLA may fuse consecutive float folds into a single
+        # larger reduction (at S=1 the one-hot dot degenerates to a plain
+        # reduce), silently changing the addition order the program fixes
+        carry = jax.lax.optimization_barrier(carry)
     for r, c in zip(out_refs, carry):
         r[...] = c
 
@@ -70,34 +117,56 @@ def _segsum_policy_kernel(ids_ref, vals_ref, *out_refs, num_segments: int,
 def segsum_policy_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
                          num_segments: int, *, policy,
                          block_rows: int = 512, seg_offset: int = 0,
-                         interpret: bool = False):
+                         interpret: bool = False, program=None,
+                         blocks_per_step=None):
     """values (N, W) already in ``policy``'s domain (``Policy.prepare``
     already ran; W may exceed the raw feature width D — e.g. exact2's
     quantized|residual halves), ids (N,) int32 -> tuple of
     ``policy.carry_len`` carry arrays, not finalized.
 
     N must be a multiple of block_rows (the callers pad with
-    ``OUT_OF_RANGE_LABEL``, which one-hots to a zero row).
+    ``OUT_OF_RANGE_LABEL``, which contributes a zero row); this wrapper
+    additionally pads the *block count* up to a ``blocks_per_step``
+    multiple with whole sentinel blocks — an identity for every policy
+    whose ``update`` folds a zero contribution as a no-op (true of all
+    registered tiers: f32 ``+0`` and ``two_sum(acc, 0)`` are exact,
+    integer ``+0`` is trivial), so the supertile depth never changes the
+    result bits.
+
+    ``program`` is a planned ``BlockProgram`` (contrib mode);
+    ``blocks_per_step=None`` sizes the supertile from the VMEM window
+    (``blocks_per_step_for``).
     """
     n, d = values.shape
     if n % block_rows:
         raise ValueError(f"segsum_policy_pallas: N={n} must be a multiple "
                          f"of block_rows={block_rows}; pad in the caller")
     nb = n // block_rows
-    ids2 = segment_ids.reshape(n, 1).astype(jnp.int32)
+    if blocks_per_step is None:
+        blocks_per_step = blocks_per_step_for(block_rows, d)
+    bps = max(1, min(int(blocks_per_step), nb))
+    extra = (-nb) % bps
+    if extra:                       # whole sentinel blocks: fold identity
+        values = jnp.pad(values, ((0, extra * block_rows), (0, 0)))
+        segment_ids = jnp.pad(segment_ids, (0, extra * block_rows),
+                              constant_values=OUT_OF_RANGE_LABEL)
+        nb += extra
+    ids2 = segment_ids.reshape(-1, 1).astype(jnp.int32)
     kernel = functools.partial(_segsum_policy_kernel,
                                num_segments=num_segments,
-                               seg_offset=seg_offset, policy=policy)
+                               seg_offset=seg_offset, policy=policy,
+                               program=program, block_rows=block_rows,
+                               blocks_per_step=bps)
     # the policy's init is the one source of truth for per-component carry
     # shapes/dtypes (exact2 mixes int32 limbs with f32 residuals, and its
     # carries are half the domain width); the zeros are traced away
     carry0 = policy.init(num_segments, d)
     out = pl.pallas_call(
         kernel,
-        grid=(nb,),
+        grid=(nb // bps,),
         in_specs=[
-            pl.BlockSpec((block_rows, 1), lambda b: (b, 0)),
-            pl.BlockSpec((block_rows, d), lambda b: (b, 0)),
+            pl.BlockSpec((bps * block_rows, 1), lambda b: (b, 0)),
+            pl.BlockSpec((bps * block_rows, d), lambda b: (b, 0)),
         ],
         out_specs=[pl.BlockSpec(c.shape, lambda b: (0, 0))
                    for c in carry0],

@@ -46,15 +46,18 @@ def seg_tile_for(num_segments: int, d: int, carries: int = 1) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "block_rows",
-                                             "interpret"))
+                                             "blocks_per_step", "interpret"))
 def segment_sum(values: jnp.ndarray, segment_ids: jnp.ndarray,
                 num_segments: int, *, block_rows: int = 512,
+                blocks_per_step: Optional[int] = None,
                 interpret: Optional[bool] = None) -> jnp.ndarray:
     """JugglePAC segmented sum. values (N, D) or (N,), ids (N,) int32.
 
     A thin wrapper over the one kernel body with the ``fast`` policy
     (f32 carry, identity finalize) — ``repro.reduce`` drives the same
-    kernel for every other policy.
+    kernel for every other policy.  ``blocks_per_step`` sets the
+    double-buffered supertile depth (None = sized from the VMEM window);
+    it never changes the result bits, only how tiles stream.
     """
     interpret = _interpret_default() if interpret is None else interpret
     policy = get_policy("fast")
@@ -76,7 +79,8 @@ def segment_sum(values: jnp.ndarray, segment_ids: jnp.ndarray,
         s = min(seg_tile, num_segments - off)
         outs.append(_ss.segsum_policy_pallas(
             values, segment_ids, s, policy=policy, block_rows=block_rows,
-            seg_offset=off, interpret=interpret)[0])
+            seg_offset=off, blocks_per_step=blocks_per_step,
+            interpret=interpret)[0])
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
     return out[:, 0] if squeeze else out
 

@@ -19,6 +19,14 @@ first-class knobs:
     bitwise at any shard count, mesh shape, and device permutation —
     ``backends.py``, extensible via ``@register_backend``.
 
+What a backend executes is a *staged block-program* (``program.py``): a
+planned (``plan_program``) pair of declared stages per schedule block —
+the memory-bound gather/contrib stage (one-hot dot or PhasedAccu-style
+lane-parallel scatter, chosen by cost model) and the compute-bound carry
+update — with byte/flop hints that tell executors what to overlap (the
+pallas kernel double-buffers tiles against the update) and the roofline
+tooling what to plot.
+
 Entry points:
   ``reduce(values, segment_ids=..., num_segments=..., op=..., ...)``
       the call — see ``api.py``; ``ReduceSpec`` for reusable static specs.
@@ -54,8 +62,10 @@ from .backends import (BACKENDS, Backend, OUT_OF_RANGE_LABEL,  # noqa: F401
 from .collective import (COLLECTIVE_POLICIES, collective_mean,  # noqa: F401
                          collective_mean_tree, elastic_reduce_mean,
                          merge_carry_across)
-from .policy import (POLICIES, Policy, get_policy,  # noqa: F401
-                     register_policy, two_sum)
+from .policy import (POLICIES, Policy, fused_psum,  # noqa: F401
+                     get_policy, register_policy, two_sum)
+from .program import (BlockProgram, BlockStage,  # noqa: F401
+                      block_contrib, plan_program)
 
 # Make the module itself callable so ``repro.reduce(values, ...)`` is the
 # front door, while ``repro.reduce.ReduceSpec`` etc. keep working.
@@ -72,6 +82,8 @@ _sys.modules[__name__].__class__ = _CallableModule
 __all__ = [
     "reduce", "ReduceSpec", "ReduceStatus", "OUT_OF_RANGE_LABEL",
     "Policy", "POLICIES", "register_policy", "get_policy", "two_sum",
+    "fused_psum",
+    "BlockProgram", "BlockStage", "plan_program", "block_contrib",
     "Backend", "BACKENDS", "register_backend", "get_backend",
     "select_backend", "select_local_backend", "mask_out_of_range",
     "ambient_mesh", "default_mesh",

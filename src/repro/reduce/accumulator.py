@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import intac, juggler
-from .policy import two_sum
+from .policy import fused_psum, two_sum
 
 
 @runtime_checkable
@@ -201,11 +201,11 @@ class Limb3Accumulator:
     def merge_across(self, state, axis_names):
         """Cross-device merge (inside shard_map), taken by the module
         ``merge_across`` in place of its generic paths: the one shared
-        three-limb lowering (``core.intac.limb3_merge_across`` — int
-        limbs psum, residual pair re-binned as exponent-indexed digits
-        and psum'd); the shared scale leaf passes through untouched, and
-        the wrap-event count (overflow guard rail) psums like any other
-        integer component."""
+        three-limb lowering (``core.intac.limb3_merge_across`` — the
+        residual pair re-binned as exponent-indexed digits, then one
+        *fused* int32 psum over [hi | lo | digits]); the shared scale
+        leaf passes through untouched, and the wrap-event count
+        (overflow guard rail) psums like any other integer component."""
         hi, lo, res, comp = intac.limb3_merge_across(
             state.hi, state.lo, state.res, state.comp, axis_names)
         ovf = (None if state.ovf is None
@@ -228,7 +228,8 @@ class BinAccumulator:
     """
 
     #: every state leaf merges by addition, so a cross-device merge may
-    #: lower to one associative psum per leaf (see ``merge_across``).
+    #: lower to one fused associative psum per dtype (see
+    #: ``merge_across``).
     #: LimbAccumulator cannot claim this: its state carries the shared
     #: ``scale`` leaf, which ``merge`` keeps rather than adds.
     merge_is_add = True
@@ -320,7 +321,10 @@ def merge_across(acc: Accumulator, state, axis_names):
     psum'd integer limbs + an order-pinned residual fold) keeps full
     control of the lowering; one declaring ``merge_is_add`` (every state
     leaf merges by plain addition, e.g. BinAccumulator) reduces with one
-    associative ``psum`` per leaf; otherwise each leaf all-gathers along
+    *fused* batched ``psum`` per dtype — the leaves ravel-concat into a
+    single collective (``policy.fused_psum``), bitwise identical to
+    per-leaf psums because psum is elementwise; otherwise each leaf
+    all-gathers along
     ``axis_names`` and the per-device states fold strictly in device
     order, so the combine schedule is a pure function of the mesh —
     deterministic, and exact whenever ``merge`` is (LimbAccumulator,
@@ -346,7 +350,10 @@ def merge_across(acc: Accumulator, state, axis_names):
     if callable(own):
         return own(state, axes)
     if getattr(acc, "merge_is_add", False):
-        return jax.tree.map(lambda x: jax.lax.psum(x, axes), state)
+        # one batched collective per dtype instead of one psum per leaf:
+        # psum is elementwise, so the fused form is bitwise identical
+        leaves, treedef = jax.tree.flatten(state)
+        return jax.tree.unflatten(treedef, fused_psum(leaves, axes))
     gathered = jax.tree.map(
         lambda x: jax.lax.all_gather(x, axes, axis=0), state)
     nshards = jax.tree.leaves(gathered)[0].shape[0]

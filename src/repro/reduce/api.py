@@ -32,6 +32,7 @@ from ..core import intac
 from .backends import (OUT_OF_RANGE_LABEL, ambient_mesh, default_mesh,
                        get_backend, mask_out_of_range, select_backend)
 from .policy import get_policy
+from .program import plan_program
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,10 +56,20 @@ class ReduceSpec:
     backend: Optional[str] = None
     block_size: int = 512
     interpret: Optional[bool] = None
+    #: gather-stage form of the staged block-program: "auto" lets
+    #: ``plan_program``'s cost model pick (lane-parallel scatter for
+    #: integer tiers at large label counts — bitwise-invisible by
+    #: associativity; the one-hot dot otherwise), "dot"/"lanes" force a
+    #: form.  "lanes" on a float tier is a documented rounding-order
+    #: change (like the shard_map fast merge), never auto-selected.
+    contrib: str = "auto"
 
     def __post_init__(self):
         if self.op not in ("sum", "mean"):
             raise ValueError(f"op must be 'sum' or 'mean', got {self.op!r}")
+        if self.contrib not in ("auto", "dot", "lanes"):
+            raise ValueError(f"contrib must be 'auto', 'dot', or 'lanes', "
+                             f"got {self.contrib!r}")
         get_policy(self.policy)                      # validate eagerly
         if self.backend is not None:
             get_backend(self.backend)
@@ -153,12 +164,43 @@ def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
             status = status._replace(
                 nonfinite=jnp.logical_not(jnp.all(jnp.isfinite(values))),
                 kept_rows=jnp.sum((segment_ids >= 0).astype(jnp.int32)))
-        domain, ctx = policy.prepare(values, n)
         run_kw = ({"mesh": mesh, "axis_names": axis_names}
                   if backend.distributed else {})
-        carry = backend.run(domain, segment_ids, num_segments,
-                            policy=policy, block_size=spec.block_size,
-                            interpret=spec.interpret, **run_kw)
+        if backend.staged:
+            # plan the staged block-program once, above the executor: the
+            # contrib mode (one-hot dot vs lane-parallel scatter) and the
+            # stage cost hints are a (policy, shape) decision, not a
+            # backend one
+            run_kw["program"] = plan_program(
+                policy, num_segments=num_segments,
+                domain_width=policy.domain_width(d),
+                block_size=spec.block_size, contrib=spec.contrib)
+        if backend.staged and backend.distributed:
+            # the staged distributed path: compute only the global
+            # statistic here (one max-reduce), hand the *raw* rows to the
+            # backend, and let every shard run the elementwise
+            # ``to_domain`` on its own slice against the shared ctx —
+            # bit-identical to whole-stream prepare (to_domain is
+            # row-local), but the expensive digitization parallelizes and
+            # the narrow raw rows are what crosses the sharding boundary.
+            v32 = values.astype(jnp.float32)
+            m = (jnp.max(jnp.abs(v32)) if policy.needs_max_stat else None)
+            ctx = policy.prepare_ctx(m, n)
+            prep = () if ctx is None else (ctx,)
+
+            def _to_domain(v, *p):
+                return policy.to_domain(v, p[0] if p else None)
+
+            carry = backend.run(v32, segment_ids, num_segments,
+                                policy=policy, block_size=spec.block_size,
+                                interpret=spec.interpret,
+                                to_domain=_to_domain, prep_state=prep,
+                                **run_kw)
+        else:
+            domain, ctx = policy.prepare(values, n)
+            carry = backend.run(domain, segment_ids, num_segments,
+                                policy=policy, block_size=spec.block_size,
+                                interpret=spec.interpret, **run_kw)
         if with_status:
             sat = policy.carry_status(carry)
             if sat is not None:
@@ -266,6 +308,7 @@ def _reduce_degrade(values, segment_ids, *, spec: ReduceSpec,
 def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
            op: str = "sum", policy: str = "fast",
            backend: Optional[str] = None, block_size: int = 512,
+           contrib: str = "auto",
            interpret: Optional[bool] = None,
            mesh=None, axis_names=None,
            spec: Optional[ReduceSpec] = None,
@@ -287,6 +330,12 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
         None to auto-select (shard_map under a multi-device mesh, the
         TPU kernel on TPU, blocked elsewhere).
       block_size: rows per schedule block (the paper's cycle granularity).
+      contrib: gather-stage form for the staged block-program — "auto"
+        (default: the planner's cost model, which picks the lane-parallel
+        scatter for integer-domain tiers at large label counts, a
+        bitwise-invisible swap), "dot" (always the one-hot matmul), or
+        "lanes" (force the scatter form; for float tiers this is a
+        documented rounding-order change).  See ``repro.reduce.program``.
       interpret: force/forbid pallas interpret mode (None = auto).
       mesh: the device mesh for a distributed backend; None uses the
         ambient ``with mesh:`` context, else one flat axis over every
@@ -338,7 +387,8 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
                          f"got {on_overflow!r}")
     if spec is None:
         spec = ReduceSpec(op=op, policy=policy, backend=backend,
-                          block_size=block_size, interpret=interpret)
+                          block_size=block_size, contrib=contrib,
+                          interpret=interpret)
     # Resolve auto-selection and the mesh *before* the jit boundary: the
     # dispatch cache keys on the concrete (spec, mesh, axis_names), so an
     # activated-then-deactivated ambient mesh can never serve a stale

@@ -47,6 +47,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .policy import Policy
+from .program import BlockProgram, block_contrib, plan_program  # noqa: F401
 
 #: The one padding sentinel for every reduction entry point in this repo.
 #: Negative => never equal to a real label in [0, num_segments), so one-hot
@@ -74,13 +75,19 @@ class Backend:
     #: distributed executors additionally accept ``mesh=``/``axis_names=``
     #: (threaded by ``reduce`` from its own kwargs or the ambient mesh)
     distributed: bool = False
+    #: staged executors additionally accept ``program=`` (a planned
+    #: ``BlockProgram``: contrib mode + stage cost hints); distributed
+    #: staged executors also take ``to_domain=``/``prep_state=`` so the
+    #: domain map runs per shard.  Off by default so pre-staged custom
+    #: backends keep their old ``run`` signature.
+    staged: bool = False
 
     def supports(self, policy: Policy) -> bool:
         return "*" in self.policies or policy.name in self.policies
 
 
 def register_backend(name: str, *, policies, description: str = "",
-                     distributed: bool = False):
+                     distributed: bool = False, staged: bool = False):
     """Decorator: register ``fn`` as backend ``name``.
 
     ``policies``: iterable of policy names the executor implements, or the
@@ -113,7 +120,7 @@ def register_backend(name: str, *, policies, description: str = "",
             caps = frozenset(policies)
         BACKENDS[name] = Backend(name=name, run=fn, policies=caps,
                                  description=description,
-                                 distributed=distributed)
+                                 distributed=distributed, staged=staged)
         return fn
     return deco
 
@@ -221,17 +228,13 @@ def _pad_to_blocks(values, segment_ids, block_size):
             segment_ids.reshape(nb, block_size).astype(jnp.int32), nb)
 
 
-def _block_contrib(vals, ids, num_segments, policy):
-    """One schedule step for one (B, W) block: build the (B, S) boolean
-    one-hot and let the policy run its dot(s).
-
-    Written identically to the pallas kernel body (ids as a (B, 1) column
-    against a (1, S) label row, then ``policy.contrib``) so every backend
-    lowers to the same dot_general(s) and the cross-backend bitwise
-    contract holds.
-    """
-    labels = jnp.arange(num_segments, dtype=jnp.int32)[None, :]
-    return policy.contrib(ids[:, None] == labels, vals)
+def _block_contrib(vals, ids, num_segments, policy, program=None):
+    """One gather stage for one (B, W) block — the staged program's
+    contrib step, shared verbatim with the pallas kernel body
+    (``repro.reduce.program.block_contrib``), so every backend lowers to
+    the same dot(s) / lane scatter and the cross-backend bitwise contract
+    holds per (policy, program)."""
+    return block_contrib(vals, ids, num_segments, policy, program)
 
 
 # ---------------------------------------------------------------------------
@@ -239,15 +242,17 @@ def _block_contrib(vals, ids, num_segments, policy):
 # ---------------------------------------------------------------------------
 
 
-@register_backend("ref", policies="*",
+@register_backend("ref", policies="*", staged=True,
                   description="unrolled Python loop over blocks; the "
                               "readable schedule oracle")
 def _run_ref(values, segment_ids, num_segments, *, policy: Policy,
-             block_size: int = 512, interpret: Optional[bool] = None):
+             block_size: int = 512, interpret: Optional[bool] = None,
+             program: Optional[BlockProgram] = None):
     vb, ib, nb = _pad_to_blocks(values, segment_ids, block_size)
     carry = policy.init(num_segments, values.shape[1])
     for b in range(nb):
-        contrib = _block_contrib(vb[b], ib[b], num_segments, policy)
+        contrib = _block_contrib(vb[b], ib[b], num_segments, policy,
+                                 program)
         carry = policy.update(carry, contrib)
         # pin the block boundary: without it XLA may fuse the unrolled
         # blocks and reassociate degenerate (S=1) dots, breaking the
@@ -256,16 +261,17 @@ def _run_ref(values, segment_ids, num_segments, *, policy: Policy,
     return carry
 
 
-@register_backend("blocked", policies="*",
+@register_backend("blocked", policies="*", staged=True,
                   description="lax.scan over blocks; jit-friendly "
                               "CPU/GPU default")
 def _run_blocked(values, segment_ids, num_segments, *, policy: Policy,
-                 block_size: int = 512, interpret: Optional[bool] = None):
+                 block_size: int = 512, interpret: Optional[bool] = None,
+                 program: Optional[BlockProgram] = None):
     vb, ib, nb = _pad_to_blocks(values, segment_ids, block_size)
 
     def step(carry, blk):
         vals, ids = blk
-        contrib = _block_contrib(vals, ids, num_segments, policy)
+        contrib = _block_contrib(vals, ids, num_segments, policy, program)
         return policy.update(carry, contrib), None
 
     carry0 = policy.init(num_segments, values.shape[1])
@@ -275,10 +281,14 @@ def _run_blocked(values, segment_ids, num_segments, *, policy: Policy,
 
 @register_backend("pallas", policies=("fast", "compensated", "exact",
                                       "exact2", "procrastinate"),
-                  description="TPU Pallas kernel (interpret off-TPU) with "
+                  staged=True,
+                  description="TPU Pallas kernel (interpret off-TPU), "
+                              "double-buffered multi-block grid, "
                               "VMEM-budget label-space tiling")
 def _run_pallas(values, segment_ids, num_segments, *, policy: Policy,
-                block_size: int = 512, interpret: Optional[bool] = None):
+                block_size: int = 512, interpret: Optional[bool] = None,
+                program: Optional[BlockProgram] = None,
+                blocks_per_step: Optional[int] = None):
     from repro.kernels import jugglepac_segsum as _ss
     from repro.kernels.ops import seg_tile_for
     if interpret is None:
@@ -295,20 +305,24 @@ def _run_pallas(values, segment_ids, num_segments, *, policy: Policy,
         s = min(seg_tile, num_segments - off)
         parts.append(_ss.segsum_policy_pallas(
             values, segment_ids, s, policy=policy,
-            block_rows=block_size, seg_offset=off, interpret=interpret))
+            block_rows=block_size, seg_offset=off, interpret=interpret,
+            program=program, blocks_per_step=blocks_per_step))
     if len(parts) == 1:
         return parts[0]
     return tuple(jnp.concatenate([p[i] for p in parts], axis=0)
                  for i in range(policy.carry_len))
 
 
-@register_backend("shard_map", policies="*", distributed=True,
+@register_backend("shard_map", policies="*", distributed=True, staged=True,
                   description="multi-device: whole schedule blocks per "
-                              "shard, carries merged with the policy's "
-                              "associative combiner")
+                              "shard, per-shard domain prep, carries "
+                              "merged with one fused collective per "
+                              "carry dtype")
 def _run_shard_map(values, segment_ids, num_segments, *, policy: Policy,
                    block_size: int = 512, interpret: Optional[bool] = None,
-                   mesh: Optional[Mesh] = None, axis_names=None):
+                   mesh: Optional[Mesh] = None, axis_names=None,
+                   program: Optional[BlockProgram] = None,
+                   to_domain=None, prep_state=()):
     """Split the block schedule across a device mesh.
 
     The (N, D) stream pads to ``nshards * block_size`` granularity with
@@ -317,14 +331,30 @@ def _run_shard_map(values, segment_ids, num_segments, *, policy: Policy,
     receives *whole, contiguous* schedule blocks.  Each shard folds its
     blocks with the local auto-backend — the identical kernel body the
     single-device path runs — and the per-shard carries merge via
-    ``collective.merge_carry_across`` with the policy's combiner.  One
-    finalize happens on the merged carry, outside this function, exactly
-    as on every other backend.
+    ``collective.merge_carry_across`` with the policy's combiner (one
+    fused batched psum per carry dtype for the add-mergeable tiers).
+    One finalize happens on the merged carry, outside this function,
+    exactly as on every other backend.
+
+    ``to_domain`` moves the domain map *inside* the shards: when given
+    (the staged path ``reduce`` drives), ``values`` arrive raw and each
+    shard maps its own row slice into the policy domain —
+    ``to_domain(local_rows, *prep_state)`` with ``prep_state`` the
+    globally-computed, replicated finalize context (quantization scale /
+    window anchor).  ``Policy.to_domain`` is row-local by contract, so
+    the per-shard map is bit-identical to slicing a whole-stream domain
+    — zero bits change — while the expensive digitization (exact2's
+    residual bin_split is the dominant smoke-size cost) now scales with
+    the shard count instead of serializing on one device, and only the
+    narrow raw rows cross the host-to-device boundary, not the widened
+    domain planes.  ``to_domain=None`` keeps the legacy contract:
+    ``values`` already domain-prepared (direct ``backend.run`` callers).
 
     Invariant: integer carry state is bitwise identical to the
-    single-device schedule at any shard count, because ``prepare`` already
-    fixed the global quantization scale / window anchor and integer carry
-    addition is associative — that is the whole result for ``exact``,
+    single-device schedule at any shard count, because the quantization
+    scale / window anchor is one global constant (computed before
+    sharding, on the full masked stream) and integer carry addition is
+    associative — that is the whole result for ``exact``,
     ``procrastinate``, *and* ``exact2`` (whose residual travels as
     exponent-indexed int32 digits, so even its finalized float is bitwise
     at any shard count, mesh shape, or device permutation — the elastic
@@ -344,6 +374,7 @@ def _run_shard_map(values, segment_ids, num_segments, *, policy: Policy,
                          f"mesh axes {mesh.axis_names}")
     nshards = int(np.prod([mesh.shape[a] for a in axes]))
     inner = select_local_backend(policy)
+    inner_kw = {"program": program} if inner.staged else {}
 
     n, d = values.shape
     pad = (-n) % (nshards * block_size)
@@ -352,13 +383,24 @@ def _run_shard_map(values, segment_ids, num_segments, *, policy: Policy,
         segment_ids = jnp.pad(segment_ids, (0, pad),
                               constant_values=OUT_OF_RANGE_LABEL)
 
-    def shard_body(v, ids):
+    prep_state = tuple(prep_state)
+
+    def shard_body(v, ids, *prep):
+        if to_domain is not None:
+            v = to_domain(v, *prep)
         carry = inner.run(v, ids, num_segments, policy=policy,
-                          block_size=block_size, interpret=interpret)
+                          block_size=block_size, interpret=interpret,
+                          **inner_kw)
+        # the merge issues immediately after the local fold, with no
+        # barrier in between: one fused collective per carry dtype, free
+        # to overlap the tail of the last block's update on hardware
+        # with async collectives
         return merge_carry_across(policy, carry, axes)
 
     row_spec = axes if len(axes) > 1 else axes[0]
     return shard_map(shard_body, mesh=mesh,
-                     in_specs=(P(row_spec, None), P(row_spec)),
+                     in_specs=(P(row_spec, None), P(row_spec))
+                     + (P(),) * len(prep_state),
                      out_specs=P(), check_rep=False)(
-                         values, segment_ids.astype(jnp.int32))
+                         values, segment_ids.astype(jnp.int32),
+                         *prep_state)

@@ -55,7 +55,7 @@ import jax.numpy as jnp
 
 from repro.core import intac
 from .backends import get_backend
-from .policy import Policy, get_policy
+from .policy import Policy, fused_psum, get_policy
 
 COLLECTIVE_POLICIES = ("fast", "compensated", "exact", "exact2",
                        "procrastinate")
@@ -185,10 +185,29 @@ def elastic_reduce_mean(stack: jnp.ndarray, axis_names, *,
 
 def collective_mean_tree(grads, residuals, axis_names, *,
                          policy: str = "fast", bits: int = 8):
-    """Pytree version of ``collective_mean``; residuals may be None."""
+    """Pytree version of ``collective_mean``; residuals may be None.
+
+    The fast tier fuses the whole tree: instead of one hierarchical psum
+    per leaf (a per-leaf collective latency floor that dominates small
+    parameter trees), every leaf ravel-concats into one batched psum per
+    dtype per mesh axis (``fused_psum``, innermost axis first as before).
+    psum is elementwise, so each leaf's bits are identical to the
+    per-leaf lowering.  The integer tiers keep per-leaf collectives:
+    their quantization grids (pmax-shared scale / window anchor) are
+    sized per leaf, which is an accuracy property worth one collective
+    each.
+    """
     flat_g, tdef = jax.tree.flatten(grads)
     flat_r = ([None] * len(flat_g) if residuals is None
               else tdef.flatten_up_to(residuals))
+    if policy == "fast" and len(flat_g) > 1:
+        axes = tuple(axis_names)
+        leaves = flat_g
+        for a in reversed(axes):    # innermost (fastest) axis first
+            leaves = fused_psum(leaves, (a,))
+        n = jax.lax.psum(jnp.float32(1.0), axes)
+        return tdef.unflatten([g / n for g in leaves]), \
+            tdef.unflatten(flat_r)
     means, res = [], []
     for g, r in zip(flat_g, flat_r):
         m, nr = collective_mean(g, axis_names, policy=policy, bits=bits,

@@ -50,26 +50,57 @@ within the documented ``max_block_size``/``max_blocks``/``max_terms``
 bounds the flags provably cannot trip; they are the defense-in-depth
 layer for direct ``backend.run`` callers and future tiers.
 
-A policy owns five hooks, each pure and shape-polymorphic:
+A policy declares a *staged block-program*, each hook pure and
+shape-polymorphic:
 
-  ``prepare(values, num_terms)``      -> (domain_values, ctx)
-  ``contrib(onehot, vals)``           -> one block's contribution: the
-                                         (S, D) one-hot matmul(s) mapping
+  ``prepare_ctx(max_abs, num_terms)`` -> ctx: the finalize context as a
+                                         pure function of global stream
+                                         statistics (quantization scale,
+                                         exponent-window anchor) — shards
+                                         that agree on the stats agree on
+                                         the grid
+  ``to_domain(values, ctx)``          -> elementwise map of raw (N, D)
+                                         rows into the accumulation
+                                         domain; runs *per shard* on the
+                                         distributed path (the stream
+                                         never materializes its domain
+                                         form on one device)
+  ``prepare(values, num_terms)``      -> (domain_values, ctx): the
+                                         single-device composition of the
+                                         two stages above
+  ``contrib(onehot, vals)``           -> the gather stage, dot form: the
+                                         (S, W) one-hot matmul(s) mapping
                                          a (B, W) domain block into what
                                          ``update`` folds (policies with a
                                          multi-part domain, e.g. exact2's
                                          quantized + residual halves, run
                                          one dot per part)
-  ``init / update``                   -> the per-block carry (a tuple of
-                                         ``carry_len`` arrays all backends
-                                         thread identically; the pallas
-                                         kernel executes ``contrib`` +
-                                         ``update`` inside its grid loop)
+  ``contrib_lanes(ids, vals, S)``     -> the gather stage, lane form:
+                                         PhasedAccu-style per-lane
+                                         scatter-add partial sums folded
+                                         in lane order — bitwise equal to
+                                         the dot for integer domains
+                                         (associativity), a different
+                                         rounding order for float ones
+  ``init / update``                   -> the carry-update stage (a tuple
+                                         of ``carry_len`` arrays all
+                                         backends thread identically; the
+                                         pallas kernel executes the
+                                         gather + update stages inside
+                                         its grid loop)
+  ``stage_costs(...)``                -> declared per-block byte/flop
+                                         hints for the gather (memory-
+                                         bound) and update (compute-
+                                         bound) stages, consumed by
+                                         ``plan_program`` and the
+                                         roofline tooling
   ``merge(a, b)``                     -> combine two partial carries
                                          (cross-shard / cross-device); the
                                          combiner the ``shard_map`` backend
                                          folds with (``merge_across`` lifts
-                                         it to named-axis collectives)
+                                         it to named-axis collectives,
+                                         fusing same-dtype components into
+                                         one batched psum)
   ``finalize(carry, ctx)``            -> (S, D) f32
 
 New tiers register with ``@register_policy`` and immediately work on every
@@ -95,6 +126,41 @@ from repro.core.intac import (choose_scale, dequantize, quantize,  # noqa: F401
                               two_sum)
 
 POLICIES: Dict[str, "Policy"] = {}
+
+#: lanes the generic lane-parallel contrib splits a block into (the
+#: PhasedAccu phase count; each lane owns a contiguous row slice)
+LANES_DEFAULT = 4
+
+
+def fused_psum(arrays, axis_names):
+    """One batched ``psum`` per dtype instead of one per array.
+
+    Components of the same dtype ravel-concatenate, reduce in a single
+    collective, and split back.  ``psum`` is elementwise, so the fused
+    form is bitwise identical to per-component psums — it only collapses
+    k collective launches (exact2's four carry components, a gradient
+    pytree's many leaves) into one per dtype, which is what keeps the
+    shard_map merge off the scaling-critical path.
+    """
+    arrays = tuple(arrays)
+    axes = tuple(axis_names)
+    by_dtype: Dict = {}
+    for i, a in enumerate(arrays):
+        by_dtype.setdefault(jnp.dtype(a.dtype), []).append(i)
+    out = [None] * len(arrays)
+    for idxs in by_dtype.values():
+        if len(idxs) == 1:
+            i = idxs[0]
+            out[i] = jax.lax.psum(arrays[i], axes)
+            continue
+        flat = jnp.concatenate([arrays[i].ravel() for i in idxs])
+        summed = jax.lax.psum(flat, axes)
+        off = 0
+        for i in idxs:
+            size = arrays[i].size
+            out[i] = summed[off:off + size].reshape(arrays[i].shape)
+            off += size
+    return tuple(out)
 
 
 def register_policy(cls):
@@ -162,11 +228,19 @@ class Policy:
     #: stronger tier; saturation then raises)
     escalation: Optional[str] = None
     #: True when ``merge`` is plain elementwise addition, so a cross-device
-    #: carry merge may lower to one ``lax.psum`` per carry component (the
-    #: integer tiers: associative, any reduction topology gives the same
-    #: bits).  False forces the gathered in-order fold (compensated: its
-    #: two-sum merge is order-sensitive, so the fold order must be pinned).
+    #: carry merge may lower to one batched ``lax.psum`` per carry *dtype*
+    #: (the integer tiers: associative, any reduction topology gives the
+    #: same bits).  False forces the gathered in-order fold (compensated:
+    #: its two-sum merge is order-sensitive, so the fold order is pinned).
     merge_is_add: bool = True
+    #: True when ``prepare_ctx`` consumes the stream's max-|value|
+    #: statistic (the integer tiers size their scale / window anchor from
+    #: it); False lets ``prepare`` skip the max-reduce entirely.
+    needs_max_stat: bool = False
+    #: rough elementwise-op count of one ``update`` per carry element —
+    #: the compute-stage weight in ``stage_costs`` (fast: one add;
+    #: compensated: a two_sum; the integer tiers: limb/bin wrap_adds).
+    update_ops_per_elem: int = 1
 
     @property
     def carry_dtypes(self) -> Tuple:
@@ -174,19 +248,53 @@ class Policy:
         policy mixes domains (exact2: int32 limbs + f32 residual pair)."""
         return (self.acc_dtype,) * self.carry_len
 
+    def domain_width(self, d: int) -> int:
+        """Column count of the accumulation domain for raw width ``d``
+        (exact2/procrastinate widen by their digit-plane count)."""
+        return d
+
+    def prepare_ctx(self, max_abs, num_terms: int):
+        """Stage 0a: global statistics -> the finalize context.
+
+        A pure function of the stream's max-|value| statistic (``None``
+        unless ``needs_max_stat``) and the static row count, so any two
+        executors handed the same statistics build the identical context
+        — the property that lets the shard_map backend run ``to_domain``
+        per shard against one globally-computed ctx and stay bitwise.
+        Eagerly raises on streams beyond the tier's headroom bounds.
+        """
+        return None
+
+    def to_domain(self, values: jnp.ndarray, ctx):
+        """Stage 0b: elementwise map of raw (N, D) rows into the
+        accumulation domain under a fixed ``ctx``.
+
+        Row-local by contract (no cross-row reductions), so the
+        distributed path may apply it shard-by-shard: ``to_domain`` of a
+        row slice equals the row slice of ``to_domain`` — bit for bit.
+        The domain may be wider than (N, D) — e.g. per-element digit
+        splits — as long as ``finalize`` maps the carry back to (S, D).
+        """
+        return values.astype(jnp.float32)
+
     def prepare(self, values: jnp.ndarray, num_terms: int, *,
                 shared_max=None):
         """Map raw (N, D) values into the accumulation domain.
 
         Returns (domain_values, ctx); ctx is passed back to ``finalize``.
-        The domain may be wider than (N, D) — e.g. per-element digit
-        splits — as long as ``finalize`` maps the carry back to (S, D).
-        ``shared_max`` overrides the local max-|value| statistic the
-        integer tiers size their scale / window anchor from — collectives
-        (``elastic_reduce_mean``) pass a pmax-shared global so every
-        shard prepares on the identical grid.
+        The single-device composition of the two staged hooks:
+        ``prepare_ctx`` (global statistics -> ctx) then ``to_domain``
+        (elementwise).  ``shared_max`` overrides the local max-|value|
+        statistic the integer tiers size their scale / window anchor
+        from — collectives (``elastic_reduce_mean``) pass a pmax-shared
+        global so every shard prepares on the identical grid.
         """
-        return values.astype(jnp.float32), None
+        v = values.astype(jnp.float32)
+        m = None
+        if self.needs_max_stat:
+            m = jnp.max(jnp.abs(v)) if shared_max is None else shared_max
+        ctx = self.prepare_ctx(m, num_terms)
+        return self.to_domain(v, ctx), ctx
 
     def contrib(self, onehot: jnp.ndarray, vals: jnp.ndarray):
         """One schedule step: map a (B, S) boolean one-hot and a (B, W)
@@ -198,6 +306,65 @@ class Policy:
         """
         return jnp.dot(onehot.astype(vals.dtype).T, vals,
                        preferred_element_type=self.acc_dtype)
+
+    def contrib_lanes(self, ids: jnp.ndarray, vals: jnp.ndarray,
+                      num_segments: int, *, seg_offset: int = 0,
+                      lanes: int = LANES_DEFAULT):
+        """The gather stage in lane form: segment-local per-lane partial
+        sums (artiq ``PhasedAccu``), folded strictly in lane order.
+
+        The block's rows split into ``lanes`` contiguous slices; each lane
+        scatter-adds its rows into its own (S+1, W) partial (sentinel /
+        out-of-tile labels park on the scratch row), and the partials fold
+        lane 0 -> lane ``lanes-1``.  Per segment this is the same multiset
+        of additions as the one-hot dot, so for integer ``acc_dtype`` the
+        result is **bitwise equal** to ``contrib`` (integer addition is
+        associative) while skipping the (B, S, W) dot flops — the win when
+        the matmul is memory-bound (large S).  For float domains it is a
+        *different rounding order* (like the shard_map fast merge):
+        explicit opt-in only, never auto-selected.
+        """
+        b = ids.shape[0]
+        v = vals.astype(self.acc_dtype)
+        local = ids.reshape(b) - seg_offset
+        safe = jnp.where((local >= 0) & (local < num_segments),
+                         local, num_segments)
+        nl = max(1, min(int(lanes), b))
+        bounds = [(k * b) // nl for k in range(nl + 1)]
+        total = None
+        for k in range(nl):
+            lo, hi = bounds[k], bounds[k + 1]
+            part = jnp.zeros((num_segments + 1, v.shape[1]),
+                             self.acc_dtype).at[safe[lo:hi]].add(v[lo:hi])
+            total = part if total is None else total + part
+        return total[:num_segments]
+
+    def stage_costs(self, block_size: int, domain_width: int,
+                    num_segments: int, *, contrib: str = "dot") -> Dict:
+        """Declared per-block cost hints for the two schedule stages.
+
+        Returns ``{"contrib": {...}, "update": {...}}`` with ``bytes``,
+        ``flops``, and the declared ``bound`` ("memory" for the gather /
+        contrib stage, "compute" for the carry update) — what
+        ``plan_program`` sizes its contrib-mode crossover from and what
+        ``benchmarks/roofline.py`` projects onto the hardware roofline.
+        Estimates, not measurements: one multiply-add per dot cell, one
+        add per scatter cell, ``update_ops_per_elem`` per carry element.
+        """
+        b, w, s = block_size, domain_width, num_segments
+        acc_bytes = jnp.dtype(self.acc_dtype).itemsize
+        in_bytes = b * w * 4 + b * 4              # values tile + ids tile
+        if contrib == "lanes":
+            gather = {"bytes": float(in_bytes + (s + 1) * w * acc_bytes),
+                      "flops": float(b * w), "bound": "memory"}
+        else:
+            gather = {"bytes": float(in_bytes + s * w * acc_bytes),
+                      "flops": float(2.0 * b * s * w), "bound": "memory"}
+        update = {"bytes": float(2 * self.carry_len * s * w * acc_bytes),
+                  "flops": float(self.update_ops_per_elem
+                                 * self.carry_len * s * w),
+                  "bound": "compute"}
+        return {"contrib": gather, "update": update}
 
     def init(self, num_segments: int, d: int):
         """Zero carry, one (num_segments, d) array per ``carry_dtypes``
@@ -224,16 +391,17 @@ class Policy:
     def merge_across(self, carry, axis_names):
         """Merge per-shard carries across mesh axes (inside shard_map).
 
-        The collective face of ``merge``: when ``merge_is_add``, each
-        component reduces with one associative ``lax.psum`` (any reduction
-        topology, same bits — the integer-tier contract); otherwise the
-        carries all-gather and fold strictly in device order with
-        ``merge``, pinning the combine schedule the way the block schedule
-        pins per-shard order.
+        The collective face of ``merge``: when ``merge_is_add``, the
+        components reduce with one *fused* associative ``lax.psum`` per
+        carry dtype (``fused_psum`` — any reduction topology, same bits as
+        per-component psums: the integer-tier contract, at one collective
+        launch instead of ``carry_len``); otherwise the carries all-gather
+        and fold strictly in device order with ``merge``, pinning the
+        combine schedule the way the block schedule pins per-shard order.
         """
         axes = tuple(axis_names)
         if self.merge_is_add:
-            return tuple(jax.lax.psum(c, axes) for c in carry)
+            return fused_psum(carry, axes)
         gathered = tuple(jax.lax.all_gather(c, axes, axis=0) for c in carry)
         nshards = gathered[0].shape[0]
         merged = tuple(g[0] for g in gathered)
@@ -268,6 +436,7 @@ class CompensatedPolicy(Policy):
     name = "compensated"
     carry_len = 2
     merge_is_add = False            # two-sum merge is order-sensitive
+    update_ops_per_elem = 6         # one two_sum + the compensation add
 
     def update(self, carry, contrib):
         acc, comp = carry
@@ -299,17 +468,17 @@ class ExactPolicy(Policy):
 
     name = "exact"
     acc_dtype = jnp.int32
+    needs_max_stat = True
     #: at saturation (possible only for direct backend.run misuse — the
     #: scale sizing makes overflow unreachable through ``reduce``), the
     #: two-limb tier removes the headroom-vs-resolution trade entirely
     escalation = "exact2"
 
-    def prepare(self, values: jnp.ndarray, num_terms: int, *,
-                shared_max=None):
-        v = values.astype(jnp.float32)
-        m = jnp.max(jnp.abs(v)) if shared_max is None else shared_max
-        scale = choose_scale(m, max(num_terms, 1))
-        return quantize(v, scale), scale
+    def prepare_ctx(self, max_abs, num_terms: int):
+        return choose_scale(max_abs, max(num_terms, 1))
+
+    def to_domain(self, values: jnp.ndarray, ctx):
+        return quantize(values.astype(jnp.float32), ctx)
 
     def finalize(self, carry, ctx) -> jnp.ndarray:
         return dequantize(carry[0], ctx)
@@ -374,6 +543,10 @@ class Exact2Policy(Policy):
     #: component: bitwise identical at any shard count or mesh shape
     merge_is_add = True
 
+    needs_max_stat = True
+    #: two wrap_adds per limb element + the wrap-event pooling
+    update_ops_per_elem = 4
+
     #: domain layout: [q | digit bin 0 | ... | digit bin RES_NUM_BINS-1]
     _PARTS = 1 + intac.RES_NUM_BINS
 
@@ -381,17 +554,21 @@ class Exact2Policy(Policy):
     def carry_dtypes(self):
         return (jnp.int32,) * self.carry_len
 
-    def prepare(self, values: jnp.ndarray, num_terms: int, *,
-                shared_max=None):
+    def domain_width(self, d: int) -> int:
+        return self._PARTS * d
+
+    def prepare_ctx(self, max_abs, num_terms: int):
         if num_terms > self.MAX_TERMS:
             raise ValueError(
                 f"exact2: {num_terms} rows exceed the two-limb headroom "
                 f"bound ({self.MAX_TERMS}); split the stream and merge "
                 f"with core.intac.limb_merge3")
+        return choose_scale(max_abs, 1, qbits=self.QBITS)
+
+    def to_domain(self, values: jnp.ndarray, ctx):
         v = values.astype(jnp.float32)
         n, d = v.shape
-        m = jnp.max(jnp.abs(v)) if shared_max is None else shared_max
-        scale = choose_scale(m, 1, qbits=self.QBITS)
+        scale = ctx
         q = quantize(v, scale)
         res = v - dequantize(q, scale)        # exact: Dekker/Sterbenz
         # the residual in quantum units: |res * scale| <= 1/2, and the
@@ -405,8 +582,7 @@ class Exact2Policy(Policy):
         # is exact and a single int32 dot covers the whole domain.
         planes = jnp.moveaxis(digits, 0, 1).reshape(
             n, intac.RES_NUM_BINS * d)
-        return jnp.concatenate([q.astype(jnp.float32), planes],
-                               axis=1), scale
+        return jnp.concatenate([q.astype(jnp.float32), planes], axis=1)
 
     def contrib(self, onehot: jnp.ndarray, vals: jnp.ndarray):
         """One int32 dot per block over the whole quantized+digits
@@ -468,21 +644,26 @@ class ProcrastinatePolicy(Policy):
     carry_len = 2
     acc_dtype = jnp.int32
     max_terms = intac.BIN_MAX_TERMS
+    needs_max_stat = True
+    #: one wrap_add per bin element + the wrap-event pooling
+    update_ops_per_elem = 3
 
-    def prepare(self, values: jnp.ndarray, num_terms: int, *,
-                shared_max=None):
+    def domain_width(self, d: int) -> int:
+        return intac.NUM_BINS * d
+
+    def prepare_ctx(self, max_abs, num_terms: int):
         if num_terms > intac.BIN_MAX_TERMS:
             raise ValueError(
                 f"procrastinate: {num_terms} rows exceed the per-bin "
                 f"headroom bound ({intac.BIN_MAX_TERMS}); split the "
                 f"stream and add the bin carries")
+        return intac.bin_ref_exponent(max_abs)
+
+    def to_domain(self, values: jnp.ndarray, ctx):
         v = values.astype(jnp.float32)
         n, d = v.shape
-        m = jnp.max(jnp.abs(v)) if shared_max is None else shared_max
-        e_ref = intac.bin_ref_exponent(m)
-        digits = intac.bin_split(v, e_ref)           # (NB, N, D)
-        domain = jnp.moveaxis(digits, 0, 1).reshape(n, intac.NUM_BINS * d)
-        return domain, e_ref
+        digits = intac.bin_split(v, ctx)             # (NB, N, D)
+        return jnp.moveaxis(digits, 0, 1).reshape(n, intac.NUM_BINS * d)
 
     def init(self, num_segments: int, d: int):
         # d is the (N, NB*D) domain width: the ovf counter is (S, D)

@@ -260,6 +260,32 @@ for pol in ("exact", "exact2", "procrastinate"):
     rel = float(np.abs(a - b).max()) / max(float(np.abs(a).max()), 1e-30)
     print(f"PERM {pol} {int(np.array_equal(a, b))} {rel:.3e}")
 
+# the staged program's lane-parallel contrib through shard_map: forcing
+# contrib="lanes" swaps the gather form on every shard, and for the
+# integer tiers that must not change a single bit vs the blocked dot
+# schedule, at any shard count
+for pol in ("exact", "exact2", "procrastinate"):
+    base = np.asarray(R.reduce(vals, segment_ids=ids, num_segments=s,
+                               policy=pol, backend="blocked",
+                               block_size=bs))
+    for ndev in (1, 2, 8):
+        mesh = Mesh(np.asarray(jax.devices()[:ndev]), ("shards",))
+        out = np.asarray(R.reduce(vals, segment_ids=ids, num_segments=s,
+                                  policy=pol, backend="shard_map",
+                                  mesh=mesh, block_size=bs,
+                                  contrib="lanes"))
+        print(f"LANES {pol} {ndev} {int(np.array_equal(base, out))}")
+
+# block-size sweep at 8 shards: the bitwise tiers may not notice the
+# schedule's block granularity either
+for pol in ("exact", "exact2", "procrastinate"):
+    outs = [np.asarray(R.reduce(vals, segment_ids=ids, num_segments=s,
+                                policy=pol, backend="shard_map",
+                                mesh=mesh8, block_size=b2))
+            for b2 in (64, 128, 256)]
+    ok = all(np.array_equal(outs[0], o) for o in outs[1:])
+    print(f"BSWEEP {pol} {int(ok)}")
+
 # auto-selection under an ambient multi-device mesh, bitwise vs blocked
 with mesh8:
     auto = np.asarray(R.reduce(vals, segment_ids=ids, num_segments=s,
@@ -332,6 +358,13 @@ def test_multidevice_bitwise_invariance():
     for p in BITWISE_POLICIES:
         assert perms[p][0] == 1, p
     assert perms["exact2"][1] < 1e-6
+    lanes = {(p, int(nd)): int(ok) for tag, p, nd, ok in
+             (ln for ln in lines if ln[0] == "LANES")}
+    assert len(lanes) == 9
+    assert all(ok == 1 for ok in lanes.values()), lanes
+    bsweep = {p: int(ok) for tag, p, ok in
+              (ln for ln in lines if ln[0] == "BSWEEP")}
+    assert bsweep == {p: 1 for p in BITWISE_POLICIES}
     tags = [(ln[0], ln[1]) for ln in lines]
     assert ("AUTO", "1") in tags
     assert ("MESH2D", "1") in tags

@@ -64,6 +64,15 @@ REQUIRED_SYMBOLS = [
     "repro.serve.scheduler.Scheduler",
     "repro.serve.kv_pool.PagedKVPool",
     "repro.kernels.ops.flash_decode_paged",
+    # the staged block-program surface (docs/performance.md): the planned
+    # program every backend executes, its stage cost hints, and the fused
+    # collective the shard merges lower through
+    "repro.reduce.BlockProgram",
+    "repro.reduce.plan_program",
+    "repro.reduce.program.BlockStage",
+    "repro.reduce.block_contrib",
+    "repro.reduce.fused_psum",
+    "benchmarks.roofline.reduce_program_table",
 ]
 
 
