@@ -200,6 +200,57 @@ def table6_reduce_policies(rows, *, smoke: bool = False):
                          f"({n}x{d} rows, {s} segments)"))
 
 
+def table6c_algebra_ops(rows, *, smoke: bool = False):
+    """The reduction algebra benchmarked: ``weighted_sum`` and
+    ``moments`` on the table6 stream, every policy.
+
+    The ops transform rows *above* the policy layer, so each cell should
+    cost roughly its plain-sum sibling (moments ~2x: the [v | v*v]
+    stream doubles the domain width).  ``_err`` rows pin the integer
+    tiers to the f64 oracle — like ``table6_reduce_*_err`` they are
+    bit-deterministic on the fixed fixture, so the baseline gate holds
+    them exactly.
+    """
+    rng = np.random.RandomState(13)
+    n, d, s = (1 << 10, 16, 8) if smoke else (1 << 14, 64, 32)
+    x = (rng.randn(n, d) * 10 ** rng.uniform(-3, 3, (n, 1))) \
+        .astype(np.float32)
+    w = rng.uniform(-2.0, 2.0, n).astype(np.float32)
+    ids = np.sort(rng.randint(0, s, n))
+    x64, w64 = x.astype(np.float64), w.astype(np.float64)
+    wref = np.zeros((s, d))
+    np.add.at(wref, ids, x64 * w64[:, None])
+    mref = np.zeros((s, 2, d))
+    for seg in range(s):
+        seg_rows = x64[ids == seg]
+        if len(seg_rows):
+            mref[seg, 0] = seg_rows.mean(0)
+            mref[seg, 1] = seg_rows.var(0)
+    vals, jids, jw = jnp.asarray(x), jnp.asarray(ids), jnp.asarray(w)
+    for op, ref in (("weighted_sum", wref), ("moments", mref)):
+        for pol in ("fast", "compensated", "exact", "exact2",
+                    "procrastinate"):
+            if op == "weighted_sum":
+                fn = jax.jit(lambda v, i, ww, p=pol: repro.reduce(
+                    v, segment_ids=i, num_segments=s, op="weighted_sum",
+                    weights=ww, policy=p, backend="blocked"))
+                args = (vals, jids, jw)
+            else:
+                fn = jax.jit(lambda v, i, p=pol: repro.reduce(
+                    v, segment_ids=i, num_segments=s, op="moments",
+                    policy=p, backend="blocked"))
+                args = (vals, jids)
+            us = _time(fn, *args)
+            err = float(np.abs(np.asarray(fn(*args)) - ref).max())
+            rows.append((f"table6_{op}_{pol}_us", us,
+                         f"max_abs_err_vs_f64={err:.3e} "
+                         f"({n}x{d} rows, {s} segments, blocked backend)"))
+            if pol in ("exact", "exact2", "procrastinate"):
+                rows.append((f"table6_{op}_{pol}_err", err,
+                             f"max_abs_err_vs_f64, deterministic fixture "
+                             f"({n}x{d} rows, {s} segments)"))
+
+
 def table6b_large_n_resolution(rows, *, smoke: bool = False):
     """The shrinking-scale defect quantified: error vs f64 at growing N.
 

@@ -82,13 +82,16 @@ def sanity_checks(rows) -> list:
     """
     current = {name: val for name, val, _ in rows}
     failures = []
-    fast = current.get("table6_reduce_fast_us")
-    ex2 = current.get("table6_reduce_exact2_us")
-    if fast is not None and ex2 is not None and fast >= ex2:
-        failures.append(
-            f"table6_reduce_fast_us ({fast:.1f}us) >= "
-            f"table6_reduce_exact2_us ({ex2:.1f}us): the fast tier must "
-            f"be cheaper than the 4-component integer carry")
+    # every table6 family — the plain sum and the algebra ops riding the
+    # same stream — must keep the fast tier cheaper than exact2
+    for family in ("reduce", "weighted_sum", "moments"):
+        fast = current.get(f"table6_{family}_fast_us")
+        ex2 = current.get(f"table6_{family}_exact2_us")
+        if fast is not None and ex2 is not None and fast >= ex2:
+            failures.append(
+                f"table6_{family}_fast_us ({fast:.1f}us) >= "
+                f"table6_{family}_exact2_us ({ex2:.1f}us): the fast tier "
+                f"must be cheaper than the 4-component integer carry")
     for pol in ("fast", "exact2"):
         s1 = current.get(f"table7_{pol}_shard1_us")
         if s1 is None:
@@ -165,6 +168,7 @@ def main(argv=None) -> None:
     if args.smoke:
         paper_tables.table1_schedule(rows)
         paper_tables.table6_reduce_policies(rows, smoke=True)
+        paper_tables.table6c_algebra_ops(rows, smoke=True)
         paper_tables.table6b_large_n_resolution(rows, smoke=True)
         paper_tables.table7_shard_scaling(rows, smoke=True)
         paper_tables.table8_serving(rows, smoke=True)
@@ -175,6 +179,7 @@ def main(argv=None) -> None:
         paper_tables.table3_accumulator_comparison(rows)
         paper_tables.table5_intac(rows)
         paper_tables.table6_reduce_policies(rows)
+        paper_tables.table6c_algebra_ops(rows)
         paper_tables.table6b_large_n_resolution(rows)
         paper_tables.table7_shard_scaling(rows)
         paper_tables.table8_serving(rows)

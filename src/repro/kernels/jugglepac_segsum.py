@@ -37,6 +37,13 @@ the callers (ops.segment_sum, the reduce pallas backend) tile the label
 space when the carry would exceed the budget, and ``blocks_per_step_for``
 sizes K so the double-buffered input window stays modest (the software
 analogue of "2–8 PIS registers, not a BRAM").
+
+The reduction algebra (``repro.reduce.algebra``) needs no kernel of its
+own: an op's ``pre`` widens the stream *before* dispatch (``moments``
+folds ``[v | v*v]`` planes, components*D wide), so the width ``d`` this
+file sees is already the op-widened domain — ``blocks_per_step_for``
+shrinks the supertile depth to keep the same VMEM window, and the fold
+order (hence every bitwise contract) is untouched.
 """
 
 from __future__ import annotations

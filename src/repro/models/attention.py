@@ -260,7 +260,8 @@ def mla_apply(params, x, cfg: ModelConfig, *, positions, mode: str = "train",
     qn, qr = q[..., :nd], q[..., nd:]
     qr = apply_rope(qr, positions, cfg.rope_theta)
 
-    c = rmsnorm(params["c_norm"], dense(params["wdkv"], x), cfg.norm_eps)
+    c = rmsnorm(params["c_norm"], dense(params["wdkv"], x), cfg.norm_eps,
+                policy=cfg.norm_reduce_policy)
     kr = dense(params["wkr"], x)[:, :, None, :]             # (B,S,1,rd)
     kr = apply_rope(kr, positions, cfg.rope_theta)[:, :, 0]  # (B,S,rd)
 

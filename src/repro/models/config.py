@@ -28,6 +28,10 @@ class MoECfg:
     d_ff_shared: int = 0
     capacity_factor: float = 1.25
     router_norm_topk: bool = False   # deepseek: normalize over chosen top-k
+    # accuracy-tier name to route the top-k combine-weight normalization
+    # denominator through repro.reduce (None = plain XLA sum, bitwise
+    # identical to the pre-algebra path)
+    router_norm_policy: Optional[str] = None
 
 
 @dataclass(frozen=True)
@@ -82,6 +86,13 @@ class ModelConfig:
     # modality frontend stub: inputs arrive as precomputed embeddings
     embed_inputs: bool = False        # True => input_specs gives (B,S,D) f32
     norm_eps: float = 1e-5
+    # accuracy-tier name to route every rmsnorm's mean-square through the
+    # repro.reduce front door (None = plain XLA mean, bitwise identical
+    # to the pre-algebra path); with an integer tier the norm denominator
+    # — like the clip norm via adamw's norm_policy and the MoE combine
+    # weights via MoECfg.router_norm_policy — stops depending on XLA's
+    # internal reduction tiling
+    norm_reduce_policy: Optional[str] = None
     tie_embeddings: bool = False
     dtype: str = "bfloat16"
     # chunk length for the SSM inner scans (mamba/mLSTM chunkwise forms);

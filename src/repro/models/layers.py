@@ -57,9 +57,22 @@ def rmsnorm_init(d: int, dtype):
     return jnp.ones((d,), dtype)
 
 
-def rmsnorm(g, x, eps: float = 1e-5):
+def rmsnorm(g, x, eps: float = 1e-5, *, policy: Optional[str] = None):
+    """``policy=None`` (default) is the legacy XLA mean — bit for bit.
+    A policy name routes the per-token mean square through the
+    ``repro.reduce`` front door instead: the feature axis becomes the
+    stream (one (D, T) ``op="sumsq"`` pass, tokens as the element
+    width), so under an integer tier the norm denominator is bitwise
+    independent of how XLA tiles the reduction."""
     xf = x.astype(jnp.float32)
-    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    if policy is None:
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    else:
+        from repro import reduce as _reduce
+        d = xf.shape[-1]
+        cols = xf.reshape(-1, d).T                       # (D, T)
+        ssq = _reduce.reduce(cols, op="sumsq", policy=policy)
+        var = (ssq / d).reshape(xf.shape[:-1] + (1,))
     return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g
 
 

@@ -121,7 +121,8 @@ def _constrain_act(x, cfg: ModelConfig):
 def _apply_block(bp, spec: BlockSpec, x, cfg: ModelConfig, *, positions,
                  mode, cache, enc_out, moe_impl, is_causal=True):
     aux = jnp.float32(0.0)
-    h = rmsnorm(bp["norm1"], x, cfg.norm_eps)
+    h = rmsnorm(bp["norm1"], x, cfg.norm_eps,
+                policy=cfg.norm_reduce_policy)
     new_cache = {}
     core_cache = None if cache is None else cache.get("core")
 
@@ -156,7 +157,8 @@ def _apply_block(bp, spec: BlockSpec, x, cfg: ModelConfig, *, positions,
         # Cross-attention KV is recomputed from the encoder memory each call
         # (cheap relative to self-attention; avoids cache-structure drift
         # between prefill and decode).
-        hx = rmsnorm(bp["norm_x"], x, cfg.norm_eps)
+        hx = rmsnorm(bp["norm_x"], x, cfg.norm_eps,
+                     policy=cfg.norm_reduce_policy)
         k = dense(bp["cross"]["wk"], enc_out)
         v = dense(bp["cross"]["wv"], enc_out)
         hd = cfg.hdim
@@ -167,7 +169,8 @@ def _apply_block(bp, spec: BlockSpec, x, cfg: ModelConfig, *, positions,
         x = x + out
 
     if spec.mlp != "none":
-        h2 = rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        h2 = rmsnorm(bp["norm2"], x, cfg.norm_eps,
+                     policy=cfg.norm_reduce_policy)
         if spec.mlp == "moe":
             out, a = moe_mod.moe_apply(bp["mlp"], h2, cfg, impl=moe_impl)
             aux = aux + a
@@ -261,7 +264,8 @@ def encode(params, cfg: ModelConfig, enc_embeds, *, remat=False):
                          positions=positions, mode="train", caches=None,
                          enc_out=None, moe_impl="capacity", remat=remat,
                          is_causal=False, pattern=enc_cfg_pattern)
-    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps,
+                   policy=cfg.norm_reduce_policy)
 
 
 def forward_hidden(params, cfg: ModelConfig, *, tokens=None, embeds=None,
@@ -281,7 +285,8 @@ def forward_hidden(params, cfg: ModelConfig, *, tokens=None, embeds=None,
         params["blocks"], cfg, x, positions=positions, mode=mode,
         caches=caches, enc_out=enc_out, moe_impl=moe_impl, remat=remat)
 
-    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps,
+                policy=cfg.norm_reduce_policy)
     return x, new_caches, aux
 
 

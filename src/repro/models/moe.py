@@ -54,7 +54,16 @@ def router_topk(router_w, x, m: MoECfg):
     probs = jax.nn.softmax(logits, axis=-1)
     w, idx = jax.lax.top_k(probs, m.top_k)
     if m.router_norm_topk:
-        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+        if m.router_norm_policy is not None:
+            # combine-weight normalization through the front door: the
+            # top-k axis is the stream (k rows, tokens as the width), so
+            # the denominator every combine weight divides by reduces
+            # under the configured accuracy tier
+            from repro import reduce as _reduce
+            den = _reduce.reduce(w.T, policy=m.router_norm_policy)  # (T,)
+            w = w / jnp.maximum(den[:, None], 1e-9)
+        else:
+            w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
     # load-balancing auxiliary loss (Switch-style)
     e = m.num_experts
     me = jnp.mean(probs, axis=0)                            # mean router prob

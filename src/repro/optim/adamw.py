@@ -16,6 +16,27 @@ import jax.numpy as jnp
 from repro.core.trees import pairwise_tree_sum
 
 
+def _leaf_sumsq(x, policy: str, width: int = 1024):
+    """One leaf's sum of squares through the ``repro.reduce`` front door.
+
+    The flat leaf folds as an (n/width, width)-blocked ``op="sumsq"``
+    stream (zero-padding is exact: 0^2 contributes nothing in any tier)
+    and the (width,) partials fold once more under the same policy —
+    for the integer tiers the result is bitwise independent of backend
+    and block size, which is what makes the global norm a deterministic
+    whole-model property rather than an XLA-reduction accident.
+    """
+    from repro import reduce as _reduce
+    xf = x.astype(jnp.float32).ravel()
+    n = xf.shape[0]
+    w = max(1, min(n, width))
+    pad = (-n) % w
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+    partial = _reduce.reduce(xf.reshape(-1, w), op="sumsq", policy=policy)
+    return _reduce.reduce(partial, policy=policy)
+
+
 class AdamWState(NamedTuple):
     mu: object           # pytree, f32
     nu: object           # pytree, f32
@@ -29,28 +50,44 @@ def init(params) -> AdamWState:
                       count=jnp.zeros((), jnp.int32))
 
 
-def global_norm(tree) -> jnp.ndarray:
+def global_norm(tree, *, policy: Optional[str] = None) -> jnp.ndarray:
     """Deterministic global norm: per-leaf sum-of-squares combined with a
-    fixed pairing tree (leaf order is canonical tree order)."""
-    sq = [jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree)]
-    if not sq:
+    fixed pairing tree (leaf order is canonical tree order).
+
+    ``policy`` (an accuracy-tier name) instead routes both stages —
+    per-leaf ``op="sumsq"`` and the cross-leaf combine — through the
+    ``repro.reduce`` front door; under an integer tier the squared norm
+    is bitwise independent of leaf shapes' internal reduction order.
+    ``None`` keeps the legacy XLA-sum path, bit for bit.
+    """
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
         return jnp.float32(0.0)
-    return jnp.sqrt(pairwise_tree_sum(jnp.stack(sq), axis=0))
+    if policy is None:
+        sq = [jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves]
+        return jnp.sqrt(pairwise_tree_sum(jnp.stack(sq), axis=0))
+    from repro import reduce as _reduce
+    sq = [_leaf_sumsq(x, policy) for x in leaves]
+    return jnp.sqrt(_reduce.reduce(jnp.stack(sq), policy=policy))
 
 
-def clip_by_global_norm(grads, max_norm: float):
-    g = global_norm(grads)
+def clip_by_global_norm(grads, max_norm: float,
+                        *, norm_policy: Optional[str] = None):
+    g = global_norm(grads, policy=norm_policy)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
     return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), grads), g
 
 
 def update(grads, state: AdamWState, params, *, lr, b1: float = 0.9,
            b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
-           clip_norm: Optional[float] = 1.0):
-    """Returns (new_params, new_state, grad_norm)."""
+           clip_norm: Optional[float] = 1.0,
+           norm_policy: Optional[str] = None):
+    """Returns (new_params, new_state, grad_norm).  ``norm_policy`` routes
+    the clipping global norm through ``repro.reduce`` (None = legacy)."""
     gnorm = jnp.float32(0.0)
     if clip_norm is not None:
-        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm,
+                                           norm_policy=norm_policy)
     else:
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
 

@@ -2,9 +2,14 @@
 
 The paper's contribution is a single contract: stream in back-to-back
 variable-length sets, emit one in-order result per set with bounded
-state.  This package exposes that contract once, with two orthogonal
+state.  This package exposes that contract once, with three orthogonal
 first-class knobs:
 
+  * **op** (the algebra): ``sum`` / ``mean`` / ``weighted_sum`` /
+    ``sumsq`` / ``moments`` / ``poly`` — a registry (``algebra.py``,
+    extensible via ``@register_op``) of row-local pre/post hooks around
+    the one block schedule, so every op inherits every policy/backend
+    guarantee below (see docs/algebra.md).
   * **policy** (accuracy): ``fast`` (f32 fixed pairing tree),
     ``compensated`` (Kahan/two-sum), ``exact`` (INTAC single-limb int32),
     ``exact2`` (integer carry-save limbs + residual-digit superaccumulator:
@@ -49,18 +54,23 @@ Entry points:
 """
 
 from .accumulator import (Accumulator, BinAccumulator,  # noqa: F401
-                          FlashAccumulator, KahanAccumulator,
-                          Limb3Accumulator, LimbAccumulator,
-                          TreeAccumulator, accumulate_microbatch_grads,
-                          merge_across, merge_tree,
-                          reduce_microbatch_grads, scan_accumulate)
+                          CascadeAccumulator, FlashAccumulator,
+                          KahanAccumulator, Limb3Accumulator,
+                          LimbAccumulator, TreeAccumulator,
+                          accumulate_microbatch_grads, merge_across,
+                          merge_tree, reduce_microbatch_grads,
+                          scan_accumulate)
+from .algebra import (REDUCE_OPS, ReduceOp, cascade_poly_coeffs,  # noqa: F401
+                      cascade_weights, fir_weights, get_op, poly_weights,
+                      register_op)
 from .api import ReduceSpec, ReduceStatus, reduce  # noqa: F401
 from .backends import (BACKENDS, Backend, OUT_OF_RANGE_LABEL,  # noqa: F401
                        ambient_mesh, default_mesh, get_backend,
                        mask_out_of_range, register_backend, select_backend,
                        select_local_backend)
 from .collective import (COLLECTIVE_POLICIES, collective_mean,  # noqa: F401
-                         collective_mean_tree, elastic_reduce_mean,
+                         collective_mean_tree, collective_moments,
+                         collective_weighted_mean, elastic_reduce_mean,
                          merge_carry_across)
 from .policy import (POLICIES, Policy, fused_psum,  # noqa: F401
                      get_policy, register_policy, two_sum)
@@ -83,15 +93,19 @@ __all__ = [
     "reduce", "ReduceSpec", "ReduceStatus", "OUT_OF_RANGE_LABEL",
     "Policy", "POLICIES", "register_policy", "get_policy", "two_sum",
     "fused_psum",
+    "ReduceOp", "REDUCE_OPS", "register_op", "get_op",
+    "poly_weights", "fir_weights", "cascade_weights",
+    "cascade_poly_coeffs",
     "BlockProgram", "BlockStage", "plan_program", "block_contrib",
     "Backend", "BACKENDS", "register_backend", "get_backend",
     "select_backend", "select_local_backend", "mask_out_of_range",
     "ambient_mesh", "default_mesh",
     "Accumulator", "TreeAccumulator", "KahanAccumulator",
     "LimbAccumulator", "Limb3Accumulator", "BinAccumulator",
-    "FlashAccumulator",
+    "FlashAccumulator", "CascadeAccumulator",
     "scan_accumulate", "merge_tree", "merge_across",
     "accumulate_microbatch_grads", "reduce_microbatch_grads",
     "collective_mean", "collective_mean_tree", "COLLECTIVE_POLICIES",
+    "collective_weighted_mean", "collective_moments",
     "merge_carry_across", "elastic_reduce_mean",
 ]

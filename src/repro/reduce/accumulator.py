@@ -40,6 +40,7 @@ Instances:
 
 from __future__ import annotations
 
+import math
 from typing import Any, Protocol, runtime_checkable
 
 import jax
@@ -280,6 +281,78 @@ class FlashAccumulator:
     def finalize(self, state):
         m, l, o = state
         return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+class CascadeAccumulator:
+    """``depth`` chained plain accumulators — the cascaded-PAC
+    construction of arXiv 2509.15069, as a streaming state machine.
+
+    Every push folds the element into stage 1 and then re-folds each
+    stage's running value into the next: after n pushes stage k holds
+    the binomially time-index-weighted sum
+    ``sum_i C(n-1-i + k-1, k-1) x_i`` (``algebra.cascade_weights``), so
+    a fixed linear combination of the stages realizes any polynomial
+    time-index weighting (``algebra.cascade_poly_coeffs``) — FIR-style
+    weighted reduction out of nothing but plain adders.
+
+    State is ``(count, stage sums)``; ``merge`` concatenates two
+    partial streams *in argument order* (a then b) via the exact
+    stage-mixing law — for ``m = b.count`` trailing elements,
+    ``S_k = A_k + B_k + sum_{j<k} C(m+k-j-1, k-j) A_j`` — so chunked or
+    scanned evaluation matches the one-shot stream.  ``finalize``
+    stacks the stage sums (leading axis = stage).
+
+    >>> import jax.numpy as jnp
+    >>> acc = CascadeAccumulator(2)
+    >>> st = acc.init(jnp.zeros(()))
+    >>> for v in (1.0, 10.0, 100.0):
+    ...     st = acc.push(st, jnp.asarray(v))
+    >>> [float(v) for v in acc.finalize(st)]      # [sum, 3*1+2*10+1*100]
+    [111.0, 123.0]
+    >>> a = acc.init(jnp.zeros(())); b = acc.init(jnp.zeros(()))
+    >>> a = acc.push(a, jnp.asarray(1.0))
+    >>> for v in (10.0, 100.0):
+    ...     b = acc.push(b, jnp.asarray(v))
+    >>> [float(v) for v in acc.finalize(acc.merge(a, b))]
+    [111.0, 123.0]
+    """
+
+    def __init__(self, depth: int):
+        if depth < 1:
+            raise ValueError(f"cascade depth must be >= 1, got {depth}")
+        self.depth = int(depth)
+
+    def init(self, template):
+        z = jnp.zeros(jnp.shape(template), jnp.float32)
+        return (jnp.zeros((), jnp.int32), (z,) * self.depth)
+
+    def push(self, state, x):
+        count, sums = state
+        run = x.astype(jnp.float32)
+        new = []
+        for s in sums:
+            run = s + run               # stage k folds stage k-1's value
+            new.append(run)
+        return (count + 1, tuple(new))
+
+    def merge(self, a, b):
+        ca, sa = a
+        cb, sb = b
+        m = cb.astype(jnp.float32)
+        out = []
+        for k in range(1, self.depth + 1):
+            s = sa[k - 1] + sb[k - 1]
+            for j in range(1, k):
+                r = k - j               # C(m + r - 1, r), m traced
+                coef = jnp.float32(1.0)
+                for t in range(r):
+                    coef = coef * (m + t)
+                s = s + (coef / math.factorial(r)) * sa[j - 1]
+            out.append(s)
+        return (ca + cb, tuple(out))
+
+    def finalize(self, state):
+        return jnp.stack(state[1], axis=0)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,297 @@
+"""Reduction algebra: the op registry above the accuracy policies.
+
+JugglePAC's circuit reduces *whatever* the datapath feeds it — the
+schedule never cares that a block row is a raw sample, a weighted
+sample, or a squared one.  This module makes that true of the repo's
+front door: ``reduce(op=...)`` is no longer a hard-coded ``sum|mean``
+pair but a registry of ``ReduceOp`` instances, each declaring two pure
+row-local hooks around the one block schedule:
+
+  * ``pre(values, weights=, coeffs=)`` — map the raw (N, D) stream to
+    the (N, components*D) stream the schedule actually folds.  Running
+    it *above* the policy layer is the whole design: the transformed
+    rows flow through ``Policy.prepare`` / ``prepare_ctx`` /
+    ``to_domain`` unchanged, so every tier weights **in its own
+    domain** — ``fast`` multiplies in f32, while the integer tiers
+    (exact / exact2 / procrastinate) size their quantization scale from
+    the *weighted* magnitudes and fold exact integer images of the
+    weighted rows.  Every downstream guarantee (cross-backend bitwise
+    per policy, shard-count invariance for integer carries, the
+    ``on_overflow="degrade"`` chunking, status flags) is inherited, not
+    re-proved, because downstream only ever sees a wider sum.
+  * ``post(summed, counts)`` — finalize the per-segment sums into the
+    op's result (mean's divide, moments' mean/var resolve).  ``counts``
+    is the exact int32 in-range row count per segment (only materialized
+    when ``needs_count``).
+
+``components`` is the op's domain-width multiplier: ``moments`` folds a
+``[v | v*v]`` double-width stream through one schedule pass — a
+multi-component carry in the same sense as exact2's limb planes, and
+the planner/kernel budgets (``plan_program``, the pallas supertile
+sizing) see the widened width automatically.
+
+Time-index weightings (``op="poly"``, FIR taps via ``fir_weights``) are
+the cascaded-accumulator construction of arXiv 2509.15069 done as a
+``pre``: ``k`` chained plain accumulators realize binomial time-index
+weights (``cascade_weights``; the streaming form is
+``repro.reduce.CascadeAccumulator``), and any degree-(k-1) polynomial
+weighting is a fixed linear combination of those ``k`` stages
+(``cascade_poly_coeffs``).
+
+Registering a new op:
+
+>>> @register_op
+... class _NegSum(ReduceOp):
+...     name = "negsum"
+...     def pre(self, values, *, weights=None, coeffs=None):
+...         return -values.astype(jnp.float32)
+>>> get_op("negsum").name
+'negsum'
+>>> del REDUCE_OPS["negsum"]                    # keep the doctest pure
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+#: name -> registered ``ReduceOp`` instance
+REDUCE_OPS: Dict[str, "ReduceOp"] = {}
+
+
+def register_op(cls):
+    """Class decorator: instantiate and register a ``ReduceOp``."""
+    op = cls()
+    if not op.name or op.name == "?":
+        raise ValueError(f"ReduceOp subclass {cls.__name__} must set a name")
+    if op.name in REDUCE_OPS:
+        raise ValueError(f"reduce op {op.name!r} is already registered")
+    REDUCE_OPS[op.name] = op
+    return cls
+
+
+def get_op(name: str) -> "ReduceOp":
+    try:
+        return REDUCE_OPS[name]
+    except KeyError:
+        raise ValueError(f"unknown reduce op {name!r}; registered ops: "
+                         f"{sorted(REDUCE_OPS)}") from None
+
+
+class ReduceOp:
+    """One entry of the reduction algebra.
+
+    Class attributes declare the op's static shape so ``reduce`` can
+    validate eagerly and the planner can size domains:
+
+    * ``components`` — width multiplier of the folded stream (``pre``
+      returns (N, components*D)); ``post`` receives the per-segment
+      (S, components*D) sums.
+    * ``takes_weights`` / ``requires_weights`` — whether ``weights=``
+      is accepted / mandatory.
+    * ``takes_coeffs`` / ``requires_coeffs`` — same for the static
+      ``coeffs`` tuple (rides in ``ReduceSpec``, so it is jit-static).
+    * ``needs_count`` — ``post`` wants the exact per-segment in-range
+      row counts (int32, (S, 1)); ops that don't ask don't pay for the
+      scatter-add.
+
+    Both hooks must be row-local (``pre``) / segment-local (``post``):
+    that is what lets every executor — ref, blocked, the pallas kernel,
+    shard_map at any device count, and the degrade chunker — run the
+    transformed stream through the unmodified block schedule.
+    """
+
+    name: str = "?"
+    components: int = 1
+    takes_weights: bool = False
+    requires_weights: bool = False
+    takes_coeffs: bool = False
+    requires_coeffs: bool = False
+    needs_count: bool = False
+
+    def pre(self, values, *, weights=None, coeffs=None):
+        """(N, D) raw rows -> (N, components*D) rows to fold."""
+        return values
+
+    def post(self, summed, counts):
+        """(S, components*D) sums (+ (S, 1) counts) -> op result."""
+        return summed
+
+
+def _weighted(values, weights):
+    return values.astype(jnp.float32) * weights.astype(jnp.float32)[:, None]
+
+
+@register_op
+class SumOp(ReduceOp):
+    """Plain segmented sum — ``pre`` is the identity (no dtype cast, so
+    the pre-algebra behavior is preserved bit for bit)."""
+
+    name = "sum"
+
+
+@register_op
+class MeanOp(ReduceOp):
+    """Segmented mean over in-range rows (exact integer counts)."""
+
+    name = "mean"
+    needs_count = True
+
+    def post(self, summed, counts):
+        return summed / jnp.maximum(counts, 1).astype(jnp.float32)
+
+
+@register_op
+class WeightedSumOp(ReduceOp):
+    """sum_i w_i * v_i with per-row weights, folded in every tier's own
+    domain.  All-ones weights are a bitwise identity (IEEE ``x * 1.0``),
+    so ``weighted_sum(w=1)`` equals ``op="sum"`` bit for bit on f32
+    input under every policy — the algebra's anchor law."""
+
+    name = "weighted_sum"
+    takes_weights = True
+    requires_weights = True
+
+    def pre(self, values, *, weights=None, coeffs=None):
+        return _weighted(values, weights)
+
+
+@register_op
+class SumsqOp(ReduceOp):
+    """sum_i v_i^2 — the global-norm / second-moment primitive."""
+
+    name = "sumsq"
+
+    def pre(self, values, *, weights=None, coeffs=None):
+        vf = values.astype(jnp.float32)
+        return vf * vf
+
+
+@register_op
+class MomentsOp(ReduceOp):
+    """Running (mean, var) per segment via one double-width pass.
+
+    ``pre`` widens each row to ``[v | v*v]`` — a two-component carry in
+    the same sense as exact2's limb planes — and ``post`` resolves
+    ``mean = s1/c`` and ``var = max(s2/c - mean^2, 0)``.  Under an exact
+    tier both running sums are exact, so the variance inherits the
+    shift-robustness of the sums themselves; the clamp guards the
+    float-tier cancellation case (``var`` is mathematically >= 0).
+
+    Result shape grows a leading statistic axis: (S, 2, D) segmented,
+    (2, D) whole-stream, (2,) for 1-D input.
+    """
+
+    name = "moments"
+    components = 2
+    needs_count = True
+
+    def pre(self, values, *, weights=None, coeffs=None):
+        vf = values.astype(jnp.float32)
+        return jnp.concatenate([vf, vf * vf], axis=1)
+
+    def post(self, summed, counts):
+        d = summed.shape[1] // 2
+        c = jnp.maximum(counts, 1).astype(jnp.float32)
+        m1 = summed[:, :d] / c
+        m2 = summed[:, d:] / c
+        var = jnp.maximum(m2 - m1 * m1, 0.0)
+        return jnp.stack([m1, var], axis=1)
+
+
+@register_op
+class PolyOp(ReduceOp):
+    """Polynomial time-index weighting: sum_i p(i) * v_i with
+    ``p(i) = coeffs[0] + coeffs[1]*i + ...`` over the stream's global
+    row index — the weighting a cascade of plain accumulators realizes
+    (arXiv 2509.15069; see ``cascade_poly_coeffs``).  ``coeffs`` is
+    static (it rides in ``ReduceSpec``), the weights are computed in f32
+    by Horner's rule."""
+
+    name = "poly"
+    takes_coeffs = True
+    requires_coeffs = True
+
+    def pre(self, values, *, weights=None, coeffs=None):
+        return _weighted(values, poly_weights(values.shape[0], coeffs))
+
+
+def poly_weights(n: int, coeffs: Sequence[float]) -> jnp.ndarray:
+    """The (n,) f32 weight vector ``w_i = p(i)`` for the polynomial with
+    ascending ``coeffs`` (Horner in f32).
+
+    >>> [float(v) for v in poly_weights(4, (1.0, 2.0))]
+    [1.0, 3.0, 5.0, 7.0]
+    """
+    i = jnp.arange(n, dtype=jnp.float32)
+    w = jnp.zeros((n,), jnp.float32)
+    for c in reversed(tuple(coeffs)):
+        w = w * i + jnp.float32(c)
+    return w
+
+
+def fir_weights(n: int, taps: Sequence[float]) -> jnp.ndarray:
+    """Weights that make ``weighted_sum`` emit one FIR output:
+    ``y[n-1] = sum_k taps[k] * x[n-1-k]`` (newest sample gets tap 0 —
+    the constant-coefficient transversal-filter form).
+
+    >>> [float(v) for v in fir_weights(4, (0.5, 0.25))]
+    [0.0, 0.0, 0.25, 0.5]
+    """
+    w = np.zeros(n, np.float32)
+    for k, t in enumerate(taps):
+        if n - 1 - k >= 0:
+            w[n - 1 - k] = t
+    return jnp.asarray(w)
+
+
+def cascade_weights(n: int, depth: int) -> jnp.ndarray:
+    """Time-index weights realized by ``depth`` chained plain
+    accumulators over an n-element stream (arXiv 2509.15069): after the
+    last push, stage k (1-based) holds ``sum_i C(n-1-i + k-1, k-1) x_i``
+    — row ``k-1`` of the returned (depth, n) f32 array.
+
+    >>> np.asarray(cascade_weights(4, 2)).tolist()
+    [[1.0, 1.0, 1.0, 1.0], [4.0, 3.0, 2.0, 1.0]]
+    """
+    rows = [[math.comb(n - 1 - i + k - 1, k - 1) for i in range(n)]
+            for k in range(1, depth + 1)]
+    return jnp.asarray(rows, jnp.float32)
+
+
+def cascade_poly_coeffs(coeffs: Sequence[float], n: int) -> tuple:
+    """Stage-combination weights for the cascaded-FIR construction.
+
+    Returns ``alpha`` (one float per cascade stage, ``len(coeffs)``
+    stages) such that ``sum_k alpha[k] * stage_{k+1}`` equals the direct
+    ``op="poly"`` weighting ``p(i) = coeffs[0] + coeffs[1]*i + ...`` on
+    an n-element stream: stage k's weights are a degree-(k-1) polynomial
+    in the row index with nonzero leading coefficient, so the first
+    ``deg`` stages span exactly the degree-(deg-1) polynomials and the
+    (deg, deg) change of basis below is invertible.  Solved in f64 on
+    the first ``deg`` row indices (both sides are degree-(deg-1)
+    polynomials, so agreeing there is agreeing everywhere).
+
+    >>> alpha = cascade_poly_coeffs((0.0, 1.0), 5)   # p(i) = i
+    >>> w = sum(a * np.asarray(cascade_weights(5, 2), np.float64)[k]
+    ...         for k, a in enumerate(alpha))
+    >>> w.tolist()
+    [0.0, 1.0, 2.0, 3.0, 4.0]
+    """
+    deg = len(coeffs)
+    if deg == 0:
+        return ()
+    if n < deg:
+        raise ValueError(f"need n >= {deg} stream elements to pin a "
+                         f"degree-{deg - 1} weighting, got n={n}")
+    basis = np.zeros((deg, deg), np.float64)      # [sample i, stage k]
+    target = np.zeros(deg, np.float64)
+    for i in range(deg):
+        for k in range(1, deg + 1):
+            basis[i, k - 1] = math.comb(n - 1 - i + k - 1, k - 1)
+        target[i] = sum(c * float(i) ** p for p, c in enumerate(coeffs))
+    alpha = np.linalg.solve(basis, target)
+    return tuple(float(a) for a in alpha)

@@ -1,13 +1,16 @@
 """The front door: ``repro.reduce(...)`` and ``ReduceSpec``.
 
 One call for every reduction in the repo — segmented or whole-stream,
-sum or mean, any accuracy policy, any executor:
+any registered op of the reduction algebra (``sum`` / ``mean`` /
+``weighted_sum`` / ``sumsq`` / ``moments`` / ``poly`` — see
+``repro.reduce.algebra``), any accuracy policy, any executor:
 
     from repro import reduce
     out = reduce(values)                                   # (N, D) -> (D,)
     out = reduce(values, segment_ids=ids, num_segments=8)  # -> (8, D)
     out = reduce(values, segment_ids=ids, num_segments=8,
                  op="mean", policy="exact", backend="pallas")
+    out = reduce(values, op="weighted_sum", weights=w, policy="exact2")
 
 The paper's contract is preserved end to end: one in-order result per
 variable-length set, a fixed pairing schedule (results depend only on
@@ -29,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import intac
+from .algebra import get_op
 from .backends import (OUT_OF_RANGE_LABEL, ambient_mesh, default_mesh,
                        get_backend, mask_out_of_range, select_backend)
 from .policy import get_policy
@@ -51,11 +55,15 @@ class ReduceSpec:
     True
     """
 
-    op: str = "sum"                   # "sum" | "mean"
+    op: str = "sum"                   # any op in algebra.REDUCE_OPS
     policy: str = "fast"              # any registered policy name
     backend: Optional[str] = None
     block_size: int = 512
     interpret: Optional[bool] = None
+    #: static coefficients for coefficient-taking ops (``op="poly"``'s
+    #: ascending polynomial); a tuple so the spec stays hashable and the
+    #: weights trace as constants under jit
+    coeffs: Optional[tuple] = None
     #: gather-stage form of the staged block-program: "auto" lets
     #: ``plan_program``'s cost model pick (lane-parallel scatter for
     #: integer tiers at large label counts — bitwise-invisible by
@@ -65,8 +73,12 @@ class ReduceSpec:
     contrib: str = "auto"
 
     def __post_init__(self):
-        if self.op not in ("sum", "mean"):
-            raise ValueError(f"op must be 'sum' or 'mean', got {self.op!r}")
+        op = get_op(self.op)                         # validate eagerly
+        if self.coeffs is not None:
+            if not op.takes_coeffs:
+                raise ValueError(f"op {self.op!r} takes no coeffs")
+            object.__setattr__(self, "coeffs",
+                               tuple(float(c) for c in self.coeffs))
         if self.contrib not in ("auto", "dot", "lanes"):
             raise ValueError(f"contrib must be 'auto', 'dot', or 'lanes', "
                              f"got {self.contrib!r}")
@@ -123,6 +135,11 @@ def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
               segmented: bool, squeeze_d: bool, mesh=None, axis_names=None,
               with_status: bool = False):
     policy = get_policy(spec.policy)
+    op_ = get_op(spec.op)
+    # values arrive already transformed by the op's ``pre`` (``reduce``
+    # ran it before the jit boundary), so ``d`` here is the op-widened
+    # stream width (components * raw D) and everything below — domain
+    # planning, the kernels, the shard merges — is op-agnostic.
     n, d = values.shape
     # ``reduce`` resolved backend=None before the jit boundary, so specs
     # arriving here are concrete; keep the fallback for direct callers.
@@ -174,7 +191,8 @@ def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
             run_kw["program"] = plan_program(
                 policy, num_segments=num_segments,
                 domain_width=policy.domain_width(d),
-                block_size=spec.block_size, contrib=spec.contrib)
+                block_size=spec.block_size, contrib=spec.contrib,
+                op=spec.op)
         if backend.staged and backend.distributed:
             # the staged distributed path: compute only the global
             # statistic here (one max-reduce), hand the *raw* rows to the
@@ -207,18 +225,23 @@ def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
                 status = status._replace(saturated=sat)
         out = policy.finalize(carry, ctx)            # (S, D) f32
 
-    if spec.op == "mean" and n > 0:
-        # Counts: exact integers, so a single scatter-add is bitwise-
-        # identical to running the block schedule again at a fraction of
-        # the cost, and backend-independent by construction.  Accumulate
-        # in int32 — an f32 count buffer silently saturates at 2^24
-        # (adding 1.0 to 16777216.0 is a no-op) — and cast once for the
-        # divide.  segment_ids is already sentinel-masked; park dropped
-        # rows on a scratch row.
-        ids_safe = jnp.where(segment_ids >= 0, segment_ids, num_segments)
-        cnt = jnp.zeros((num_segments + 1, 1), jnp.int32) \
-            .at[ids_safe].add(1)[:num_segments]            # (S, 1)
-        out = out / jnp.maximum(cnt, 1).astype(jnp.float32)
+    cnt = None
+    if op_.needs_count:
+        if n > 0:
+            # Counts: exact integers, so a single scatter-add is bitwise-
+            # identical to running the block schedule again at a fraction
+            # of the cost, and backend-independent by construction.
+            # Accumulate in int32 — an f32 count buffer silently saturates
+            # at 2^24 (adding 1.0 to 16777216.0 is a no-op) — and cast
+            # once for the divide.  segment_ids is already sentinel-
+            # masked; park dropped rows on a scratch row.
+            ids_safe = jnp.where(segment_ids >= 0, segment_ids,
+                                 num_segments)
+            cnt = jnp.zeros((num_segments + 1, 1), jnp.int32) \
+                .at[ids_safe].add(1)[:num_segments]        # (S, 1)
+        else:
+            cnt = jnp.zeros((num_segments, 1), jnp.int32)
+    out = op_.post(out, cnt)
 
     if not segmented:
         out = out[0]
@@ -250,6 +273,7 @@ def _reduce_degrade(values, segment_ids, *, spec: ReduceSpec,
     Returns ``(out, ReduceStatus)``.
     """
     policy = get_policy(spec.policy)
+    op_ = get_op(spec.op)        # values already carry the op's ``pre``
     n, d = values.shape
     nb = -(-n // spec.block_size)
     over = bool((policy.max_terms is not None and n > policy.max_terms)
@@ -287,14 +311,18 @@ def _reduce_degrade(values, segment_ids, *, spec: ReduceSpec,
             num_segments=num_segments, segmented=segmented,
             squeeze_d=squeeze_d, mesh=mesh, axis_names=axis_names)
         return out, status._replace(degraded=jnp.asarray(True))
-    if spec.op == "mean" and n > 0:
-        # same exact-integer count scheme as _dispatch, over the full
-        # stream (bitwise independent of the chunking)
-        mids = mask_out_of_range(segment_ids, num_segments)
-        ids_safe = jnp.where(mids >= 0, mids, num_segments)
-        cnt = jnp.zeros((num_segments + 1, 1), jnp.int32) \
-            .at[ids_safe].add(1)[:num_segments]
-        out = out / jnp.maximum(cnt, 1).astype(jnp.float32)
+    cnt = None
+    if op_.needs_count:
+        if n > 0:
+            # same exact-integer count scheme as _dispatch, over the full
+            # stream (bitwise independent of the chunking)
+            mids = mask_out_of_range(segment_ids, num_segments)
+            ids_safe = jnp.where(mids >= 0, mids, num_segments)
+            cnt = jnp.zeros((num_segments + 1, 1), jnp.int32) \
+                .at[ids_safe].add(1)[:num_segments]
+        else:
+            cnt = jnp.zeros((num_segments, 1), jnp.int32)
+    out = op_.post(out, cnt)
 
     status = status._replace(
         degraded=jnp.logical_or(status.degraded, jnp.asarray(degraded)))
@@ -310,6 +338,7 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
            backend: Optional[str] = None, block_size: int = 512,
            contrib: str = "auto",
            interpret: Optional[bool] = None,
+           weights=None, coeffs=None,
            mesh=None, axis_names=None,
            spec: Optional[ReduceSpec] = None,
            with_status: bool = False,
@@ -323,7 +352,15 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
         [0, num_segments) — including the repo-wide padding sentinel
         ``OUT_OF_RANGE_LABEL`` — are dropped from sums *and* counts.
       num_segments: static label-space size; required with ``segment_ids``.
-      op: "sum" or "mean" (mean counts only in-range rows).
+      op: any op of the reduction algebra (``repro.reduce.algebra``) —
+        "sum", "mean" (counts only in-range rows), "weighted_sum"
+        (requires ``weights``), "sumsq", "moments" (per-segment
+        (mean, var) via one double-width pass; adds a leading size-2
+        statistic axis to the result), or "poly" (requires ``coeffs``;
+        time-index polynomial weighting).  The op's row-local ``pre``
+        runs before dispatch, so every accuracy tier folds the
+        transformed rows in its own domain and every backend/shard/
+        degrade guarantee applies unchanged.
       policy: accuracy tier — "fast", "compensated", "exact", "exact2",
         or "procrastinate" (see ``repro.reduce.policy`` for the ladder).
       backend: executor — "ref", "blocked", "pallas", "shard_map", or
@@ -337,6 +374,11 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
         "lanes" (force the scatter form; for float tiers this is a
         documented rounding-order change).  See ``repro.reduce.program``.
       interpret: force/forbid pallas interpret mode (None = auto).
+      weights: (N,) or (N, 1) per-row weights for weight-taking ops
+        (``op="weighted_sum"``).  Applied row-locally before dispatch;
+        sentinel-labeled rows drop out exactly as their values do.
+      coeffs: ascending polynomial coefficients for coefficient-taking
+        ops (``op="poly"``); static — becomes ``ReduceSpec.coeffs``.
       mesh: the device mesh for a distributed backend; None uses the
         ambient ``with mesh:`` context, else one flat axis over every
         visible device.  Rejected for single-device backends.  Note the
@@ -381,6 +423,15 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
     >>> (float(out), bool(status.nonfinite), bool(status.saturated),
     ...  int(status.kept_rows))
     (6.0, False, False, 4)
+    >>> float(reduce(jnp.asarray([1.0, 2.0, 3.0]), op="weighted_sum",
+    ...              weights=jnp.asarray([1.0, 0.5, 2.0]),
+    ...              policy="exact2"))                    # 1 + 1 + 6
+    8.0
+    >>> mv = reduce(jnp.asarray([1.0, 3.0]), op="moments")  # (mean, var)
+    >>> [float(v) for v in mv]
+    [2.0, 1.0]
+    >>> float(reduce(jnp.ones(4), op="poly", coeffs=(0.0, 1.0)))  # sum i
+    6.0
     """
     if on_overflow not in ("raise", "degrade"):
         raise ValueError(f"on_overflow must be 'raise' or 'degrade', "
@@ -388,7 +439,9 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
     if spec is None:
         spec = ReduceSpec(op=op, policy=policy, backend=backend,
                           block_size=block_size, contrib=contrib,
-                          interpret=interpret)
+                          interpret=interpret, coeffs=coeffs)
+    elif coeffs is not None and spec.coeffs is None:
+        spec = spec.replace(coeffs=coeffs)
     # Resolve auto-selection and the mesh *before* the jit boundary: the
     # dispatch cache keys on the concrete (spec, mesh, axis_names), so an
     # activated-then-deactivated ambient mesh can never serve a stale
@@ -426,6 +479,27 @@ def reduce(values, *, segment_ids=None, num_segments: Optional[int] = None,
     squeeze_d = values.ndim == 1
     if squeeze_d:
         values = values[:, None]
+
+    # The algebra's one interception point: run the op's row-local
+    # ``pre`` here, above the jit boundary and above every executor, so
+    # the dispatch/degrade/shard machinery below only ever sees a plain
+    # (possibly wider) sum of the transformed rows.
+    op_ = get_op(spec.op)
+    if op_.requires_weights and weights is None:
+        raise ValueError(f"op {spec.op!r} requires per-row weights=")
+    if weights is not None and not op_.takes_weights:
+        raise ValueError(f"op {spec.op!r} takes no weights")
+    if op_.requires_coeffs and spec.coeffs is None:
+        raise ValueError(f"op {spec.op!r} requires coeffs=")
+    if weights is not None:
+        weights = jnp.asarray(weights)
+        if weights.ndim == 2 and weights.shape[-1] == 1:
+            weights = weights[:, 0]
+        if weights.ndim != 1 or weights.shape[0] != values.shape[0]:
+            raise ValueError(
+                f"weights must be (N,) or (N, 1) matching values' "
+                f"N={values.shape[0]}, got shape {weights.shape}")
+    values = op_.pre(values, weights=weights, coeffs=spec.coeffs)
 
     segmented = segment_ids is not None
     if segmented:

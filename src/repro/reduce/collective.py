@@ -132,6 +132,64 @@ def collective_mean(x: jnp.ndarray, axis_names: Sequence[str], *,
                      f"choose from {COLLECTIVE_POLICIES}")
 
 
+def collective_weighted_mean(x: jnp.ndarray, w: jnp.ndarray, axis_names,
+                             *, policy: str = "fast", bits: int = 8,
+                             eps: float = 1e-9) -> jnp.ndarray:
+    """Cross-device weighted mean ``sum(w*x) / sum(w)`` under an
+    accuracy policy — the collective face of ``op="weighted_sum"``.
+
+    Both the weighted numerator and the weight mass reduce through
+    ``collective_mean`` (the per-device counts cancel in the ratio), so
+    each gets its own policy-sized quantization grid; for the bitwise
+    tiers the result is invariant to topology like the mean itself.
+    Must run inside ``shard_map``.
+
+    >>> import jax, jax.numpy as jnp, numpy as np
+    >>> from jax.sharding import Mesh, PartitionSpec as P
+    >>> from jax.experimental.shard_map import shard_map
+    >>> mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    >>> f = lambda x, w: collective_weighted_mean(x, w, ("data",),
+    ...                                           policy="exact2")
+    >>> out = shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+    ...                 check_rep=False)(jnp.asarray([1.0, 4.0]),
+    ...                                  jnp.asarray([3.0, 1.0]))
+    >>> [float(v) for v in out]                    # per-element w*x / w
+    [1.0, 4.0]
+    """
+    num, _ = collective_mean(x * w, axis_names, policy=policy, bits=bits)
+    den, _ = collective_mean(w, axis_names, policy=policy, bits=bits)
+    return num / jnp.maximum(den, eps)
+
+
+def collective_moments(x: jnp.ndarray, axis_names, *,
+                       policy: str = "fast", bits: int = 8
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-device running moments: elementwise (mean, var) over the
+    device axis — the collective face of ``op="moments"``.
+
+    Two ``collective_mean`` passes (E[x] and E[x^2]) rather than one
+    concatenated payload: the integer tiers size their quantization
+    grid per collective, and x and x^2 live on very different scales —
+    sharing a grid would cost the smaller component its resolution.
+    ``var = max(E[x^2] - E[x]^2, 0)`` with the clamp guarding float-tier
+    cancellation; under a bitwise tier both expectations — hence the
+    moments — are invariant to topology.  Must run inside ``shard_map``.
+
+    >>> import jax, jax.numpy as jnp, numpy as np
+    >>> from jax.sharding import Mesh, PartitionSpec as P
+    >>> from jax.experimental.shard_map import shard_map
+    >>> mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    >>> f = lambda x: collective_moments(x, ("data",), policy="exact2")
+    >>> m, v = shard_map(f, mesh=mesh, in_specs=P(), out_specs=(P(), P()),
+    ...                  check_rep=False)(jnp.asarray([1.5, -2.0]))
+    >>> [float(a) for a in m], [float(a) for a in v]
+    ([1.5, -2.0], [0.0, 0.0])
+    """
+    m1, _ = collective_mean(x, axis_names, policy=policy, bits=bits)
+    m2, _ = collective_mean(x * x, axis_names, policy=policy, bits=bits)
+    return m1, jnp.maximum(m2 - m1 * m1, 0.0)
+
+
 def elastic_reduce_mean(stack: jnp.ndarray, axis_names, *,
                         policy: str = "exact2",
                         block_size: int = 512) -> jnp.ndarray:

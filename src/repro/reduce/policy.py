@@ -1,8 +1,14 @@
 """Accuracy policies — the first-class knob of ``repro.reduce``.
 
 JugglePAC's fixed-pairing argument says *what order* additions happen in;
-the policy says *in what domain* they happen.  Five tiers, all sharing the
-same block schedule (so a policy swap never changes the data movement):
+the policy says *in what domain* they happen.  (A third layer, the
+reduction algebra of ``algebra.py``, says *what is being summed*: ops
+like ``weighted_sum``/``moments`` transform rows *before* ``prepare``
+sees them, so the integer tiers quantize — and therefore weight — in
+their own exact domain, and an op's extra components simply widen the
+``domain_width`` every policy already parameterizes over.)  Five tiers,
+all sharing the same block schedule (so a policy swap never changes the
+data movement):
 
   * ``fast``          — plain f32 accumulation over the fixed block tree.
     Deterministic (the schedule depends only on shapes), O(log n) error

@@ -87,6 +87,14 @@ class BlockProgram:
     num_segments: int
     domain_width: int
     stages: Tuple[BlockStage, ...]
+    #: the algebra op this plan serves ("sum" unless the front door says
+    #: otherwise).  The op's cost is already folded into the stage hints
+    #: — its ``pre`` widens ``domain_width`` by ``components`` (moments'
+    #: [v | v*v] planes double every byte/flop figure below), which is
+    #: exactly how the kernel's supertile sizing sees it too — so the
+    #: field is the planner's provenance record for roofline/debug
+    #: output, never a behavioral switch.
+    op: str = "sum"
 
     def stage(self, name: str) -> BlockStage:
         for s in self.stages:
@@ -98,7 +106,7 @@ class BlockProgram:
 
 def plan_program(policy, *, num_segments: int, domain_width: int,
                  block_size: int = 512, contrib: str = "auto",
-                 lanes: int = LANES_DEFAULT) -> BlockProgram:
+                 lanes: int = LANES_DEFAULT, op: str = "sum") -> BlockProgram:
     """Plan the staged block-program for one (policy, shape) pair.
 
     ``contrib="auto"`` applies the cost model: integer-domain policies
@@ -135,7 +143,8 @@ def plan_program(policy, *, num_segments: int, domain_width: int,
     return BlockProgram(policy=policy.name, contrib=contrib,
                         lanes=int(lanes), block_size=int(block_size),
                         num_segments=int(num_segments),
-                        domain_width=int(domain_width), stages=stages)
+                        domain_width=int(domain_width), stages=stages,
+                        op=str(op))
 
 
 def block_contrib(vals, ids, num_segments: int, policy: Policy,

@@ -29,7 +29,8 @@ def make_train_step(cfg: ModelConfig, *, lr_fn: Callable,
                     clip_norm: float = 1.0, weight_decay: float = 0.1,
                     logits_pspec=None, num_microbatches: int = 1,
                     grad_reduce: Optional[str] = None,
-                    grad_reduce_mesh=None):
+                    grad_reduce_mesh=None,
+                    norm_policy: Optional[str] = None):
     """num_microbatches > 1: the batch splits along dim 0 and gradients
     accumulate through the JugglePAC binary-counter pairing tree
     (repro.reduce.TreeAccumulator) — activation memory scales down by the
@@ -54,7 +55,13 @@ def make_train_step(cfg: ModelConfig, *, lr_fn: Callable,
     across *device topologies* (checkpoint on 2 devices, resume on 8),
     use ``repro.distributed.collectives.make_elastic_train_step``
     instead — it pins the microbatch grid to the global stream and
-    reduces through ``elastic_reduce_mean`` (docs/robustness.md)."""
+    reduces through ``elastic_reduce_mean`` (docs/robustness.md).
+
+    ``norm_policy`` routes the gradient-clipping global norm through the
+    ``repro.reduce`` front door (``adamw.global_norm``); together with
+    ``cfg.norm_reduce_policy`` (rmsnorm) and
+    ``MoECfg.router_norm_policy`` (combine weights) it makes the
+    in-model reductions policy-governed end to end (docs/algebra.md)."""
     from repro import reduce as _reduce
 
     def grad_fn(p, b):
@@ -89,7 +96,7 @@ def make_train_step(cfg: ModelConfig, *, lr_fn: Callable,
         lr = lr_fn(opt_state.count + 1)   # count is 0-based
         params, opt_state, gnorm = adamw.update(
             grads, opt_state, params, lr=lr, clip_norm=clip_norm,
-            weight_decay=weight_decay)
+            weight_decay=weight_decay, norm_policy=norm_policy)
         metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
         return params, opt_state, metrics
     return train_step

@@ -1,0 +1,285 @@
+"""Property-based laws of the reduction algebra (ISSUE 9).
+
+Every law lives in a plain ``check_*`` helper driven twice:
+
+  * a hypothesis ``@given`` wrapper — randomized inputs, runs wherever
+    hypothesis is installed (CI's tier1 job installs the [dev] extra);
+  * a fixed-example ``test_*`` twin — runs everywhere, so the laws stay
+    exercised even where the conftest stub skips the ``@given`` path.
+
+The laws:
+  * all-ones ``weighted_sum`` is *bitwise* ``op="sum"`` on every tier
+    (IEEE ``x * 1.0`` is an identity, and the algebra's ``pre`` runs
+    above every policy);
+  * integer tiers are linear and permutation-invariant in the weighted
+    stream (associative int32 folds; the quantization scale is a
+    function of max|value| and N, both permutation-invariant);
+  * ``moments`` is shift-robust under the exact tiers and its variance
+    is never negative;
+  * the cascaded-accumulator construction (CascadeAccumulator +
+    cascade_poly_coeffs) reproduces the direct ``op="poly"`` weighting,
+    and ``fir_weights`` matches the convolution oracle.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import reduce as R
+from repro.reduce import CascadeAccumulator
+from repro.reduce.algebra import (cascade_poly_coeffs, cascade_weights,
+                                  fir_weights, poly_weights)
+
+POLICIES = ("fast", "compensated", "exact", "exact2", "procrastinate")
+INT_POLICIES = ("exact", "exact2", "procrastinate")
+
+
+def _data(n, d, s, seed):
+    rng = np.random.RandomState(seed)
+    vals = (rng.randn(n, d) * 10 ** rng.uniform(-2, 2, (n, 1))) \
+        .astype(np.float32)
+    ids = rng.randint(-1, s, n).astype(np.int32)   # -1: sentinel rows too
+    w = rng.uniform(-2.0, 2.0, n).astype(np.float32)
+    return vals, ids, w
+
+
+# ---------------------------------------------------------------------------
+# law: weighted_sum(w=1) == sum, bitwise, per tier
+# ---------------------------------------------------------------------------
+
+
+def check_all_ones_weighted_is_sum(seed, s, policy, block_size=64):
+    vals, ids, _ = _data(200, 3, s, seed)
+    kw = dict(segment_ids=jnp.asarray(ids), num_segments=s, policy=policy,
+              backend="blocked", block_size=block_size)
+    plain = R.reduce(jnp.asarray(vals), op="sum", **kw)
+    ones = R.reduce(jnp.asarray(vals), op="weighted_sum",
+                    weights=jnp.ones(len(vals)), **kw)
+    assert np.array_equal(np.asarray(plain), np.asarray(ones)), policy
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_all_ones_weighted_is_sum(policy):
+    for seed in (0, 1, 2):
+        check_all_ones_weighted_is_sum(seed, 5, policy)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), s=st.integers(1, 8),
+       policy=st.sampled_from(POLICIES))
+def test_prop_all_ones_weighted_is_sum(seed, s, policy):
+    check_all_ones_weighted_is_sum(seed, s, policy)
+
+
+# ---------------------------------------------------------------------------
+# law: integer tiers — permutation invariance of the weighted stream
+# ---------------------------------------------------------------------------
+
+
+def check_weighted_permutation_invariance(seed, policy):
+    vals, ids, w = _data(160, 2, 4, seed)
+    perm = np.random.RandomState(seed + 1).permutation(len(vals))
+    kw = dict(num_segments=4, policy=policy, backend="blocked",
+              block_size=32)
+    a = R.reduce(jnp.asarray(vals), segment_ids=jnp.asarray(ids),
+                 op="weighted_sum", weights=jnp.asarray(w), **kw)
+    b = R.reduce(jnp.asarray(vals[perm]), segment_ids=jnp.asarray(ids[perm]),
+                 op="weighted_sum", weights=jnp.asarray(w[perm]), **kw)
+    assert np.array_equal(np.asarray(a), np.asarray(b)), policy
+
+
+@pytest.mark.parametrize("policy", INT_POLICIES)
+def test_weighted_permutation_invariance(policy):
+    for seed in (0, 3):
+        check_weighted_permutation_invariance(seed, policy)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), policy=st.sampled_from(INT_POLICIES))
+def test_prop_weighted_permutation_invariance(seed, policy):
+    check_weighted_permutation_invariance(seed, policy)
+
+
+# ---------------------------------------------------------------------------
+# law: integer tiers — linearity in the weights
+# ---------------------------------------------------------------------------
+
+
+def check_weighted_linearity(seed, policy):
+    """reduce(v, w1+w2) == reduce(v, w1) + reduce(v, w2) up to the tier's
+    own resolution (each term is within ~1 ulp of its f64 reference for
+    the exact2/procrastinate tiers, so the defect is bounded by the
+    oracle's)."""
+    vals, ids, w1 = _data(128, 2, 4, seed)
+    w2 = np.roll(w1, 7)
+    kw = dict(segment_ids=jnp.asarray(ids), num_segments=4, policy=policy,
+              backend="blocked", block_size=32)
+    vj = jnp.asarray(vals)
+    both = np.asarray(R.reduce(vj, op="weighted_sum",
+                               weights=jnp.asarray(w1 + w2), **kw))
+    split = (np.asarray(R.reduce(vj, op="weighted_sum",
+                                 weights=jnp.asarray(w1), **kw))
+             + np.asarray(R.reduce(vj, op="weighted_sum",
+                                   weights=jnp.asarray(w2), **kw)))
+    scale = np.abs(vals).max() * np.abs(w1).max() * len(vals)
+    assert np.allclose(both, split, atol=1e-4 * scale), policy
+
+
+@pytest.mark.parametrize("policy", INT_POLICIES)
+def test_weighted_linearity(policy):
+    for seed in (0, 5):
+        check_weighted_linearity(seed, policy)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), policy=st.sampled_from(INT_POLICIES))
+def test_prop_weighted_linearity(seed, policy):
+    check_weighted_linearity(seed, policy)
+
+
+# ---------------------------------------------------------------------------
+# law: moments — var >= 0 everywhere, shift-robust on the exact tiers
+# ---------------------------------------------------------------------------
+
+
+def check_moments_nonnegative_var(seed, policy):
+    vals, ids, _ = _data(120, 3, 4, seed)
+    mv = np.asarray(R.reduce(jnp.asarray(vals), segment_ids=jnp.asarray(ids),
+                             num_segments=4, op="moments", policy=policy,
+                             backend="blocked", block_size=32))
+    assert mv.shape == (4, 2, 3)
+    assert (mv[:, 1] >= 0.0).all(), policy
+
+
+def check_moments_shift_robust(seed, policy, shift=64.0):
+    """var(x + c) == var(x) up to the tier's resolution: the running
+    sums are exact under the integer tiers, so the cancellation in
+    E[x^2] - E[x]^2 is the only f32 step left."""
+    rng = np.random.RandomState(seed)
+    x = rng.randn(256).astype(np.float32)
+    kw = dict(op="moments", policy=policy, backend="blocked", block_size=64)
+    v0 = float(R.reduce(jnp.asarray(x), **kw)[1])
+    v1 = float(R.reduce(jnp.asarray(x + np.float32(shift)), **kw)[1])
+    assert v0 >= 0.0 and v1 >= 0.0
+    assert abs(v0 - v1) <= 1e-3 * max(v0, 1.0), (policy, v0, v1)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_moments_nonnegative_var(policy):
+    for seed in (0, 1):
+        check_moments_nonnegative_var(seed, policy)
+
+
+@pytest.mark.parametrize("policy", ("exact2", "procrastinate"))
+def test_moments_shift_robust(policy):
+    for seed in (0, 2):
+        check_moments_shift_robust(seed, policy)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), policy=st.sampled_from(POLICIES))
+def test_prop_moments_nonnegative_var(seed, policy):
+    check_moments_nonnegative_var(seed, policy)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       policy=st.sampled_from(("exact2", "procrastinate")),
+       shift=st.sampled_from((16.0, 64.0, 256.0)))
+def test_prop_moments_shift_robust(seed, policy, shift):
+    check_moments_shift_robust(seed, policy, shift)
+
+
+# ---------------------------------------------------------------------------
+# law: cascaded FIR == direct polynomial oracle
+# ---------------------------------------------------------------------------
+
+
+def check_cascade_matches_poly(seed, coeffs, n=48):
+    """depth-k chained accumulators + the stage-mixing solve reproduce
+    the direct ``op="poly"`` weighting (and both match the f64 oracle)."""
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n).astype(np.float32)
+    deg = len(coeffs)
+    acc = CascadeAccumulator(deg)
+    stt = acc.init(jnp.zeros(()))
+    for v in x:
+        stt = acc.push(stt, jnp.asarray(v))
+    stages = np.asarray(acc.finalize(stt), np.float64)          # (deg,)
+    alpha = cascade_poly_coeffs(coeffs, n)
+    cascaded = float(sum(a * s for a, s in zip(alpha, stages)))
+    direct = float(R.reduce(jnp.asarray(x), op="poly", coeffs=coeffs,
+                            policy="exact2", backend="blocked"))
+    i = np.arange(n, dtype=np.float64)
+    oracle = float(np.sum(x.astype(np.float64)
+                          * sum(c * i ** p for p, c in enumerate(coeffs))))
+    tol = 1e-4 * max(1.0, abs(oracle))
+    assert abs(direct - oracle) <= tol, (direct, oracle)
+    assert abs(cascaded - oracle) <= tol, (cascaded, oracle)
+
+
+def check_cascade_merge_is_concat(seed, depth, n=32, cut=13):
+    """merge(prefix, suffix) == one-shot stream, exactly (the binomial
+    stage-mixing law), and the final stage weights match
+    ``cascade_weights``."""
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n).astype(np.float32)
+    acc = CascadeAccumulator(depth)
+
+    def run(xs):
+        s = acc.init(jnp.zeros(()))
+        for v in xs:
+            s = acc.push(s, jnp.asarray(v))
+        return s
+
+    whole = np.asarray(acc.finalize(run(x)))
+    merged = np.asarray(acc.finalize(acc.merge(run(x[:cut]), run(x[cut:]))))
+    assert np.allclose(whole, merged, rtol=1e-5), depth
+    w = np.asarray(cascade_weights(n, depth), np.float64)       # (depth, n)
+    oracle = w @ x.astype(np.float64)
+    assert np.allclose(whole, oracle, rtol=1e-4), depth
+
+
+@pytest.mark.parametrize("coeffs", [(1.0,), (0.0, 1.0), (2.0, -1.0, 0.5)])
+def test_cascade_matches_poly(coeffs):
+    for seed in (0, 1):
+        check_cascade_matches_poly(seed, coeffs)
+
+
+@pytest.mark.parametrize("depth", (1, 2, 3, 4))
+def test_cascade_merge_is_concat(depth):
+    check_cascade_merge_is_concat(0, depth)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       coeffs=st.lists(st.sampled_from((-1.0, -0.5, 0.0, 0.5, 1.0, 2.0)),
+                       min_size=1, max_size=4).map(tuple))
+def test_prop_cascade_matches_poly(seed, coeffs):
+    check_cascade_matches_poly(seed, coeffs)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), depth=st.integers(1, 4),
+       cut=st.integers(1, 31))
+def test_prop_cascade_merge_is_concat(seed, depth, cut):
+    check_cascade_merge_is_concat(seed, depth, cut=cut)
+
+
+def test_fir_weights_match_convolution_oracle():
+    rng = np.random.RandomState(4)
+    x = rng.randn(64).astype(np.float32)
+    taps = (0.5, 0.25, 0.125, 0.0625)
+    out = float(R.reduce(jnp.asarray(x), op="weighted_sum",
+                         weights=fir_weights(len(x), taps),
+                         policy="exact2"))
+    oracle = float(np.convolve(x.astype(np.float64), taps, "full")
+                   [len(x) - 1])
+    assert abs(out - oracle) <= 1e-5 * max(1.0, abs(oracle))
+
+
+def test_poly_weights_is_horner():
+    w = np.asarray(poly_weights(5, (2.0, 3.0, 1.0)))
+    i = np.arange(5.0)
+    assert np.array_equal(w, (2.0 + 3.0 * i + i ** 2).astype(np.float32))

@@ -159,6 +159,73 @@ def test_degrade_is_eager_only():
 
 
 # ---------------------------------------------------------------------------
+# reduction-algebra ops under the same guard rails (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def test_nonfinite_weight_in_kept_rows_trips_the_flag():
+    """The algebra's ``pre`` multiplies before any policy sees the rows,
+    so a NaN *weight* on a kept row poisons the transformed stream the
+    same way a NaN value would — and the status flag must say so."""
+    w = np.ones(8, np.float32)
+    w[3] = np.nan
+    out, st = R.reduce(jnp.ones((8, 2)), segment_ids=jnp.zeros(8, jnp.int32),
+                       num_segments=1, op="weighted_sum",
+                       weights=jnp.asarray(w), policy="fast",
+                       with_status=True)
+    assert bool(st.nonfinite)
+    assert int(st.kept_rows) == 8
+
+
+@pytest.mark.parametrize("op", ("weighted_sum", "moments"))
+@pytest.mark.parametrize("policy", POLICIES)
+def test_nonfinite_in_dropped_rows_never_poisons_algebra_ops(op, policy):
+    """Sentinel zeroing runs downstream of ``pre``, so NaN/Inf payloads
+    in dropped rows — in the values *or* the weights — leave the clean
+    run's exact bits, for every op x tier."""
+    rng = np.random.RandomState(1)
+    x = rng.randn(192, 3).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, 192).astype(np.float32)
+    ids = rng.randint(0, 4, 192).astype(np.int32)
+    burst = np.arange(0, 192, 5)
+    ids[burst] = R.OUT_OF_RANGE_LABEL
+    kw = {"weights": jnp.asarray(w)} if op == "weighted_sum" else {}
+    clean = R.reduce(jnp.asarray(x), segment_ids=jnp.asarray(ids),
+                     num_segments=4, op=op, policy=policy, **kw)
+    xp = faults.inject_nonfinite(x, rows=burst, kind="both")
+    if op == "weighted_sum":
+        wp = w.copy()
+        wp[burst] = np.nan
+        kw = {"weights": jnp.asarray(wp)}
+    out, st = R.reduce(jnp.asarray(xp), segment_ids=jnp.asarray(ids),
+                       num_segments=4, op=op, policy=policy,
+                       with_status=True, **kw)
+    assert np.array_equal(np.asarray(clean), np.asarray(out)), (op, policy)
+    assert np.isfinite(np.asarray(out)).all()
+    assert not bool(st.nonfinite)
+
+
+@pytest.mark.parametrize("op", ("weighted_sum", "moments"))
+def test_degrade_chunks_over_bound_streams_algebra_ops(op):
+    """The degrade fallback folds the op-transformed stream and applies
+    ``post`` once at the end — over-bound weighted/moment reductions
+    stay correct and flagged, like plain sums."""
+    n = (1 << 21) + 3
+    x = jnp.ones(n)
+    kw = {"weights": jnp.full((n,), 2.0)} if op == "weighted_sum" else {}
+    with pytest.raises(ValueError, match="blocks"):
+        R.reduce(x, op=op, policy="exact2", block_size=64, **kw)
+    out, st = R.reduce(x, op=op, policy="exact2", block_size=64,
+                       on_overflow="degrade", with_status=True, **kw)
+    if op == "weighted_sum":
+        assert float(out) == float(2.0 * n)
+    else:
+        assert float(out[0]) == 1.0 and float(out[1]) == 0.0
+    assert bool(st.degraded) and not bool(st.saturated)
+    assert int(st.kept_rows) == n
+
+
+# ---------------------------------------------------------------------------
 # checkpoint storage faults
 # ---------------------------------------------------------------------------
 

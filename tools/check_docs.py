@@ -73,6 +73,23 @@ REQUIRED_SYMBOLS = [
     "repro.reduce.block_contrib",
     "repro.reduce.fused_psum",
     "benchmarks.roofline.reduce_program_table",
+    # the reduction-algebra surface (docs/algebra.md): the op registry,
+    # the registered ops, the cascaded time-weighting constructors, and
+    # the collective companions of the new ops
+    "repro.reduce.ReduceOp",
+    "repro.reduce.register_op",
+    "repro.reduce.get_op",
+    "repro.reduce.algebra.WeightedSumOp",
+    "repro.reduce.algebra.SumsqOp",
+    "repro.reduce.algebra.MomentsOp",
+    "repro.reduce.algebra.PolyOp",
+    "repro.reduce.CascadeAccumulator",
+    "repro.reduce.poly_weights",
+    "repro.reduce.fir_weights",
+    "repro.reduce.cascade_weights",
+    "repro.reduce.cascade_poly_coeffs",
+    "repro.reduce.collective_weighted_mean",
+    "repro.reduce.collective_moments",
 ]
 
 
