@@ -1,0 +1,63 @@
+"""Static analysis of the determinism contract (see docs/determinism-lint.md).
+
+Layer 1 (``repro.analysis.rules``): AST lint rules DET001–DET006 over
+``src/repro`` — raw reductions outside the front door, unbarriered fold
+loops, mode-less scatters, order-dependent PRNG in serving code,
+registry hook drift, f32 count arithmetic.
+
+Layer 2 (``repro.analysis.contracts``): jaxpr-level checks DET101–DET105
+— trace every registered policy × backend × op on canonical shapes and
+verify carry dtypes, integer-only ``merge_is_add`` carries, fold
+barriers, and cross-block-size structural invariance.
+
+CLI: ``python tools/detlint.py`` (``--check-waivers`` adds the waiver
+ratchet CI enforces).
+"""
+
+from repro.analysis.walker import (  # noqa: F401
+    SourceModule,
+    iter_source_files,
+    parse_module,
+    parse_source,
+    repo_root,
+    resolve_symbol,
+    symbol_origin,
+    symbol_origin_ok,
+    symbol_resolves,
+)
+from repro.analysis.rules import (  # noqa: F401
+    ALL_RULE_IDS,
+    AST_RULES,
+    Finding,
+    LintRule,
+    TOLERATED_FLOAT_MERGE,
+    check_registries,
+    run_lint,
+)
+
+__all__ = [
+    "ALL_RULE_IDS",
+    "AST_RULES",
+    "Finding",
+    "LintRule",
+    "SourceModule",
+    "TOLERATED_FLOAT_MERGE",
+    "check_registries",
+    "iter_source_files",
+    "parse_module",
+    "parse_source",
+    "repo_root",
+    "resolve_symbol",
+    "run_contracts",
+    "symbol_origin",
+    "symbol_origin_ok",
+    "symbol_resolves",
+    "run_lint",
+]
+
+
+def run_contracts(*args, **kwargs):
+    """Lazy forwarder: ``repro.analysis.contracts`` imports jax and the
+    live registries, which the pure-AST layer must not require."""
+    from repro.analysis import contracts
+    return contracts.run_contracts(*args, **kwargs)

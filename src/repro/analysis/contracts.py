@@ -1,0 +1,345 @@
+"""Layer 2 of detlint: jaxpr-level determinism-contract checks.
+
+The AST rules catch textual drift; this layer checks the *traced*
+program.  Every registered policy × backend (× op, for coverage) is
+``jax.make_jaxpr``-traced on canonical shapes — no compilation, no
+device execution — and the traces are held to the contract
+docs/architecture.md promises:
+
+DET101  the carry a backend actually produces matches the policy's
+        declared ``carry_dtypes`` / ``carry_len`` (a policy that
+        declares int32 limbs but traces to f32 has silently left the
+        exact tier).
+DET102  ``merge_is_add`` policies carry only integer leaves in the
+        *traced* carry — a float leaf under a psum merge is
+        order-sensitive across shards.  The fast tier's documented
+        float tolerance is allowlisted in
+        ``rules.TOLERATED_FLOAT_MERGE`` and surfaces as a *waived*
+        finding, counted by the ratchet like any pragma.
+DET103  fold bodies keep their ``optimization_barrier``s: the unrolled
+        ref schedule must trace >= one barrier per block, and the Pallas
+        kernel body >= one per fused block per grid step (the PR 8
+        regression, checked statically).
+DET104  claimed-invariant tiers (all-integer carries) produce
+        structurally identical jaxprs across block sizes: same primitive
+        vocabulary, same output avals.  A block-size-dependent primitive
+        sneaking into an exact tier breaks bitwise-across-block-sizes.
+DET105  coverage: the full policy × backend × op matrix traces at all.
+        A combination that raises at trace time is a contract hole the
+        runtime tests may never visit.
+
+Run via ``python tools/detlint.py`` (layer 2 included by default) or
+``repro.analysis.run_contracts()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.rules import Finding, TOLERATED_FLOAT_MERGE
+
+#: canonical trace shapes: small enough to trace in milliseconds, big
+#: enough for multiple blocks at the two canonical block sizes
+_S, _D, _N = 4, 2, 128
+_BLOCK_SIZES = (32, 64)
+
+
+def _jaxpr_types():
+    import jax
+    try:
+        from jax.extend import core as jex_core
+        return (jex_core.Jaxpr, jex_core.ClosedJaxpr)
+    except (ImportError, AttributeError):
+        return (jax.core.Jaxpr, jax.core.ClosedJaxpr)
+
+
+def _sub_jaxprs(v, types):
+    if isinstance(v, types[0]):
+        yield v
+    elif isinstance(v, types[1]):
+        yield v.jaxpr
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _sub_jaxprs(x, types)
+
+
+def count_primitive(jaxpr, name: str, *, _types=None) -> int:
+    """Occurrences of primitive ``name`` in ``jaxpr``, recursing into
+    sub-jaxprs (scan bodies, pjit calls, pallas kernel bodies)."""
+    types = _types or _jaxpr_types()
+    if isinstance(jaxpr, types[1]):
+        jaxpr = jaxpr.jaxpr
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v, types):
+                n += count_primitive(sub, name, _types=types)
+    return n
+
+
+def primitive_names(jaxpr, *, _types=None) -> frozenset:
+    """The primitive vocabulary of a jaxpr, recursively."""
+    types = _types or _jaxpr_types()
+    if isinstance(jaxpr, types[1]):
+        jaxpr = jaxpr.jaxpr
+    names = set()
+    for eqn in jaxpr.eqns:
+        names.add(eqn.primitive.name)
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v, types):
+                names |= primitive_names(sub, _types=types)
+    return frozenset(names)
+
+
+@dataclasses.dataclass
+class _Ctx:
+    """Imports + canonical inputs, built once per run."""
+
+    jax: object
+    jnp: object
+    policies: Dict
+    backends: Dict
+    ops: Dict
+    mesh: object
+    vals: np.ndarray
+    ids: np.ndarray
+
+    @classmethod
+    def build(cls):
+        import jax
+        import jax.numpy as jnp
+        from repro.reduce.policy import POLICIES
+        from repro.reduce.backends import BACKENDS, default_mesh
+        from repro.reduce.algebra import REDUCE_OPS
+        rng = np.random.RandomState(0)
+        vals = rng.randn(_N, _D).astype(np.float32)
+        ids = (np.arange(_N) % _S).astype(np.int32)
+        return cls(jax=jax, jnp=jnp, policies=dict(POLICIES),
+                   backends=dict(BACKENDS), ops=dict(REDUCE_OPS),
+                   mesh=default_mesh(), vals=vals, ids=ids)
+
+    def run_kwargs(self, backend) -> Dict:
+        kw = {}
+        if getattr(backend, "distributed", False):
+            kw["mesh"] = self.mesh
+        return kw
+
+    def trace_carry(self, policy, backend, *, block_size: int, **extra):
+        """make_jaxpr of prepare + backend.run; returns the ClosedJaxpr
+        whose outputs are the raw carry leaves."""
+
+        def fn(v, i):
+            domain, _ctx = policy.prepare(v, _N)
+            return backend.run(domain, i, _S, policy=policy,
+                               block_size=block_size, interpret=True,
+                               **self.run_kwargs(backend), **extra)
+
+        return self.jax.make_jaxpr(fn)(self.vals, self.ids)
+
+    def trace_reduce(self, policy_name: str, backend_name: str,
+                     op_name: str, *, block_size: int):
+        from repro.reduce import api
+        op = self.ops[op_name]
+        kw = {}
+        if getattr(op, "takes_weights", False):
+            kw["weights"] = np.ones((_N,), np.float32)
+        if getattr(op, "requires_coeffs", False):
+            kw["coeffs"] = (0.0, 1.0)
+        if getattr(self.backends[backend_name], "distributed", False):
+            kw["mesh"] = self.mesh
+
+        def fn(v, i):
+            return api.reduce(v, segment_ids=i, num_segments=_S,
+                              op=op_name, policy=policy_name,
+                              backend=backend_name, block_size=block_size,
+                              interpret=True, **kw)
+
+        return self.jax.make_jaxpr(fn)(self.vals, self.ids)
+
+
+def _dtypes_of(closed) -> Tuple:
+    return tuple(np.dtype(a.dtype) for a in closed.out_avals)
+
+
+def _carry_dtype_findings(ctx: _Ctx) -> List[Finding]:
+    out = []
+    seen_102 = set()
+    for pname, policy in sorted(ctx.policies.items()):
+        declared = tuple(np.dtype(d) for d in policy.carry_dtypes)
+        for bname, backend in sorted(ctx.backends.items()):
+            if not backend.supports(policy):
+                continue
+            try:
+                closed = ctx.trace_carry(policy, backend,
+                                         block_size=_BLOCK_SIZES[0])
+            except Exception as e:
+                out.append(Finding(
+                    rule="DET101", path=f"{pname}/{bname}", line=0,
+                    message=f"carry trace failed: "
+                            f"{type(e).__name__}: {e}"))
+                continue
+            traced = _dtypes_of(closed)
+            if len(traced) != policy.carry_len or traced != declared:
+                out.append(Finding(
+                    rule="DET101", path=f"{pname}/{bname}", line=0,
+                    message=f"traced carry {[str(d) for d in traced]} != "
+                            f"declared carry_dtypes "
+                            f"{[str(d) for d in declared]} "
+                            f"(carry_len={policy.carry_len})"))
+            # DET102 on the *traced* carry, not just the declaration —
+            # once per policy (the carry is backend-independent)
+            if pname not in seen_102 and \
+                    getattr(policy, "merge_is_add", False) and \
+                    any(d.kind == "f" for d in traced):
+                seen_102.add(pname)
+                tol = TOLERATED_FLOAT_MERGE.get(pname)
+                out.append(Finding(
+                    rule="DET102", path=pname, line=0,
+                    message=f"merge_is_add policy traces float carry "
+                            f"leaves {[str(d) for d in traced]} — psum "
+                            f"merge of floats is shard-order-sensitive",
+                    waived=tol is not None, reason=tol or ""))
+    return out
+
+
+def _barrier_findings(ctx: _Ctx) -> List[Finding]:
+    """DET103: every policy's unrolled ref schedule keeps one barrier
+    per block, and the Pallas kernel body one per fused block."""
+    out = []
+    nb = _N // _BLOCK_SIZES[0]
+    ref = ctx.backends.get("ref")
+    pal = ctx.backends.get("pallas")
+    for pname, policy in sorted(ctx.policies.items()):
+        if ref is not None and ref.supports(policy):
+            try:
+                closed = ctx.trace_carry(policy, ref,
+                                         block_size=_BLOCK_SIZES[0])
+                n = count_primitive(closed, "optimization_barrier")
+                if n < nb:
+                    out.append(Finding(
+                        rule="DET103", path=f"{pname}/ref", line=0,
+                        message=f"{n} optimization_barrier(s) for {nb} "
+                                f"unrolled blocks — XLA may reassociate "
+                                f"float folds across block boundaries"))
+            except Exception as e:
+                out.append(Finding(
+                    rule="DET103", path=f"{pname}/ref", line=0,
+                    message=f"barrier trace failed: "
+                            f"{type(e).__name__}: {e}"))
+        if pal is not None and pal.supports(policy):
+            bps = 2
+            try:
+                closed = ctx.trace_carry(policy, pal,
+                                         block_size=_BLOCK_SIZES[0],
+                                         blocks_per_step=bps)
+                n = count_primitive(closed, "optimization_barrier")
+                if n < bps:
+                    out.append(Finding(
+                        rule="DET103", path=f"{pname}/pallas", line=0,
+                        message=f"{n} optimization_barrier(s) in the "
+                                f"kernel for {bps} fused blocks per grid "
+                                f"step — the PR 8 in-kernel fusion bug"))
+            except Exception as e:
+                out.append(Finding(
+                    rule="DET103", path=f"{pname}/pallas", line=0,
+                    message=f"kernel barrier trace failed: "
+                            f"{type(e).__name__}: {e}"))
+    return out
+
+
+def _invariance_findings(ctx: _Ctx) -> List[Finding]:
+    """DET104: all-integer-carry tiers must trace to the same primitive
+    vocabulary and output avals at different block sizes."""
+    out = []
+    for pname, policy in sorted(ctx.policies.items()):
+        declared = tuple(np.dtype(d) for d in policy.carry_dtypes)
+        if any(d.kind == "f" for d in declared):
+            continue       # only the claimed-invariant (integer) tiers
+        traces = {}
+        for bs in _BLOCK_SIZES:
+            try:
+                traces[bs] = ctx.trace_reduce(pname, "blocked", "sum",
+                                              block_size=bs)
+            except Exception as e:
+                out.append(Finding(
+                    rule="DET104", path=f"{pname}/blocked", line=0,
+                    message=f"invariance trace (block_size={bs}) failed: "
+                            f"{type(e).__name__}: {e}"))
+        if len(traces) != len(_BLOCK_SIZES):
+            continue
+        a, b = (traces[bs] for bs in _BLOCK_SIZES)
+        pa, pb = primitive_names(a), primitive_names(b)
+        if pa != pb:
+            out.append(Finding(
+                rule="DET104", path=f"{pname}/blocked", line=0,
+                message=f"primitive vocabulary differs across block "
+                        f"sizes {_BLOCK_SIZES}: "
+                        f"{sorted(pa ^ pb)} not in both"))
+        if _dtypes_of(a) != _dtypes_of(b) or \
+                [tuple(x.shape) for x in a.out_avals] != \
+                [tuple(x.shape) for x in b.out_avals]:
+            out.append(Finding(
+                rule="DET104", path=f"{pname}/blocked", line=0,
+                message=f"output avals differ across block sizes "
+                        f"{_BLOCK_SIZES}"))
+    return out
+
+
+def _coverage_findings(ctx: _Ctx) -> List[Finding]:
+    """DET105: the whole registered matrix must trace."""
+    out = []
+    combos = 0
+    for oname in sorted(ctx.ops):
+        for pname, policy in sorted(ctx.policies.items()):
+            for bname, backend in sorted(ctx.backends.items()):
+                if not backend.supports(policy):
+                    continue
+                combos += 1
+                try:
+                    ctx.trace_reduce(pname, bname, oname,
+                                     block_size=_BLOCK_SIZES[0])
+                except Exception as e:
+                    out.append(Finding(
+                        rule="DET105", path=f"{pname}/{bname}/{oname}",
+                        line=0,
+                        message=f"front-door trace failed: "
+                                f"{type(e).__name__}: {e}"))
+    if combos == 0:
+        out.append(Finding(rule="DET105", path="<matrix>", line=0,
+                           message="registry matrix is empty — nothing "
+                                   "was checked"))
+    return out
+
+
+def run_contracts(*, checks: Optional[Sequence[str]] = None
+                  ) -> List[Finding]:
+    """Run the jaxpr contract checks; returns findings (waived ones only
+    where the tolerance table vouches for them).
+
+    ``checks`` filters to a subset of {"carry", "barriers",
+    "invariance", "coverage"}.
+    """
+    try:
+        ctx = _Ctx.build()
+    except Exception as e:    # loud, unwaivable: checker can't even load
+        return [Finding(rule="DET105", path="<registry>", line=0,
+                        message=f"contract checker failed to load the "
+                                f"registries: {type(e).__name__}: {e}")]
+    steps = {
+        "carry": _carry_dtype_findings,
+        "barriers": _barrier_findings,
+        "invariance": _invariance_findings,
+        "coverage": _coverage_findings,
+    }
+    findings: List[Finding] = []
+    for name, fn in steps.items():
+        if checks and name not in checks:
+            continue
+        findings.extend(fn(ctx))
+    findings.sort(key=lambda f: (f.rule, f.path))
+    return findings

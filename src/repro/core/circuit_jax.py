@@ -91,7 +91,7 @@ def _step(latency: int, num_registers: int, state: PacState,
     new_set = jnp.where(is_start, s.cur_set + 1, s.cur_set)
     new_label = jnp.where(is_start, (s.cur_set + 1) % R, s.cur_label)
     label_set = jnp.where(
-        is_start, s.label_set.at[new_label].set(new_set), s.label_set)
+        is_start, s.label_set.at[new_label].set(new_set, mode="drop"), s.label_set)
 
     # Pending register update.
     stash = is_start | (is_cont & ~have_pending)
@@ -130,17 +130,17 @@ def _step(latency: int, num_registers: int, state: PacState,
 
     # pair -> FIFO push
     push_idx = jnp.clip(fifo_n, 0, FIFO_DEPTH - 1)
-    fifo_a = jnp.where(make_pair, fifo_a.at[push_idx].set(reg_v[out_l]), fifo_a)
-    fifo_b = jnp.where(make_pair, fifo_b.at[push_idx].set(out_v), fifo_b)
-    fifo_l = jnp.where(make_pair, fifo_l.at[push_idx].set(out_l), fifo_l)
+    fifo_a = jnp.where(make_pair, fifo_a.at[push_idx].set(reg_v[out_l], mode="drop"), fifo_a)
+    fifo_b = jnp.where(make_pair, fifo_b.at[push_idx].set(out_v, mode="drop"), fifo_b)
+    fifo_l = jnp.where(make_pair, fifo_l.at[push_idx].set(out_l, mode="drop"), fifo_l)
     overflow = make_pair & (fifo_n >= FIFO_DEPTH)
     fifo_n = fifo_n + make_pair.astype(jnp.int32)
 
-    reg_v = jnp.where(store, reg_v.at[out_l].set(out_v), reg_v)
-    reg_en = jnp.where(make_pair, reg_en.at[out_l].set(False),
-                       jnp.where(store, reg_en.at[out_l].set(True), reg_en))
-    reg_cnt = jnp.where(out_en, reg_cnt.at[out_l].set(0), reg_cnt)
-    reg_set = jnp.where(store, reg_set.at[out_l].set(label_set[out_l]), reg_set)
+    reg_v = jnp.where(store, reg_v.at[out_l].set(out_v, mode="drop"), reg_v)
+    reg_en = jnp.where(make_pair, reg_en.at[out_l].set(False, mode="drop"),
+                       jnp.where(store, reg_en.at[out_l].set(True, mode="drop"), reg_en))
+    reg_cnt = jnp.where(out_en, reg_cnt.at[out_l].set(0, mode="drop"), reg_cnt)
+    reg_set = jnp.where(store, reg_set.at[out_l].set(label_set[out_l], mode="drop"), reg_set)
 
     # --- Algorithm 2: timeout scan (single output port) --------------------
     thresh = L + 3
@@ -151,9 +151,9 @@ def _step(latency: int, num_registers: int, state: PacState,
     res_set = reg_set[emit_i]
     res_en = any_ready
 
-    reg_en = jnp.where(any_ready, reg_en.at[emit_i].set(False), reg_en)
-    reg_cnt = jnp.where(any_ready, reg_cnt.at[emit_i].set(0), reg_cnt)
-    reg_set = jnp.where(any_ready, reg_set.at[emit_i].set(-1), reg_set)
+    reg_en = jnp.where(any_ready, reg_en.at[emit_i].set(False, mode="drop"), reg_en)
+    reg_cnt = jnp.where(any_ready, reg_cnt.at[emit_i].set(0, mode="drop"), reg_cnt)
+    reg_set = jnp.where(any_ready, reg_set.at[emit_i].set(-1, mode="drop"), reg_set)
     # saturating increment for occupied, non-emitted registers
     reg_cnt = jnp.where(reg_en, jnp.minimum(reg_cnt + 1, thresh), reg_cnt)
 

@@ -379,6 +379,8 @@ def limbs_resolve3(hi: jnp.ndarray, lo: jnp.ndarray, res: jnp.ndarray,
     acc = res.astype(jnp.float32)
     cmp_ = (jnp.zeros_like(acc) if comp is None
             else comp.astype(jnp.float32))
+    # detlint: ok[DET002] two_sum resolve chain: order pinned by data
+    # dependence through acc; the final rounding is pinned by ulp tests
     for quanta, shift in ((lo, 0), (hil, LIMB_SHIFT),
                           (hih, LIMB_SHIFT + _HSPLIT)):
         term = descale(_ldexp2(quanta.astype(jnp.float32), shift), scale)
@@ -505,6 +507,8 @@ def bin_combine(bins: jnp.ndarray, e_ref, *,
     resolved = _bin_carry_resolve(bins, bits)
     acc = jnp.zeros(bins.shape[1:], jnp.float32)
     comp = jnp.zeros(bins.shape[1:], jnp.float32)
+    # detlint: ok[DET002] two_sum resolve chain: order pinned by data
+    # dependence through acc; the final rounding is pinned by ulp tests
     for k in range(num - 1, -1, -1):
         term = _ldexp2(resolved[k].astype(jnp.float32),
                        e_ref - (k + 1) * bits)
@@ -541,6 +545,8 @@ def limbs_resolve3_binned(hi: jnp.ndarray, lo: jnp.ndarray,
     cmp_ = jnp.zeros(hi.shape, jnp.float32)
     terms = [(resolved[k], -(k + 1) * bits) for k in range(num - 1, -1, -1)]
     terms += [(lo, 0), (hil, LIMB_SHIFT), (hih, LIMB_SHIFT + _HSPLIT)]
+    # detlint: ok[DET002] two_sum resolve chain: order pinned by data
+    # dependence through acc; the final rounding is pinned by ulp tests
     for quanta, shift in terms:
         term = descale(_ldexp2(quanta.astype(jnp.float32), shift), scale)
         acc, e = two_sum(acc, term)

@@ -49,7 +49,7 @@ class SyntheticLM:
         # fixed zipf table
         ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
         p = 1.0 / ranks ** 1.1
-        self._p = (p / p.sum()).astype(np.float64)
+        self._p = (p / p.sum()).astype(np.float64)  # detlint: ok[DET001] host-side numpy f64 dataset init, never traced
 
     def batch(self, step: int) -> dict:
         cfg = self.cfg

@@ -119,7 +119,7 @@ def make_shardmap_train_step(cfg: ModelConfig, mesh, *, lr_fn: Callable,
                 grads, (losses, _) = _reduce.accumulate_microbatch_grads(
                     grad_fn, params, mbs, num_microbatches=num_microbatches,
                     mean=True)
-            loss = jnp.mean(losses)
+            loss = jnp.mean(losses)  # detlint: ok[DET001] m microbatch scalars; grads take the front door below
         else:
             grads, (loss, _) = grad_fn(params, batch)
 
@@ -130,7 +130,7 @@ def make_shardmap_train_step(cfg: ModelConfig, mesh, *, lr_fn: Callable,
         lr = lr_fn(opt_state.count + 1)   # count is 0-based
         params, opt_state, gnorm = adamw.update(
             grads, opt_state, params, lr=lr, clip_norm=clip_norm)
-        loss = jax.lax.pmean(loss, axes)
+        loss = jax.lax.pmean(loss, axes)  # detlint: ok[DET001] logging metric only; grads go through collective_mean_tree
         return params, opt_state, residuals, {"loss": loss,
                                               "grad_norm": gnorm, "lr": lr}
 

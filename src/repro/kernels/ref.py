@@ -16,7 +16,7 @@ def segsum_ref(values: jnp.ndarray, segment_ids: jnp.ndarray,
     ids = jnp.where(ok, ids, num_segments)      # park invalid rows
     vals = jnp.where(ok[:, None], values.astype(jnp.float32), 0.0)
     out = jnp.zeros((num_segments + 1,) + values.shape[1:], jnp.float32)
-    return out.at[ids].add(vals)[:num_segments]
+    return out.at[ids].add(vals, mode="drop")[:num_segments]
 
 
 def intac_accum_ref(values: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:

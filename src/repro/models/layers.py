@@ -66,7 +66,7 @@ def rmsnorm(g, x, eps: float = 1e-5, *, policy: Optional[str] = None):
     independent of how XLA tiles the reduction."""
     xf = x.astype(jnp.float32)
     if policy is None:
-        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)  # detlint: ok[DET001] policy=None legacy path, bits pinned; sumsq front door is the knob
     else:
         from repro import reduce as _reduce
         d = xf.shape[-1]
@@ -113,6 +113,7 @@ def embed_lookup(table, tokens):
 
 
 def rope_freqs(hdim: int, theta: float) -> jnp.ndarray:
+    # detlint: ok[DET006] RoPE frequency grid: hdim/2 well under 2^24
     return 1.0 / (theta ** (jnp.arange(0, hdim, 2, dtype=jnp.float32) / hdim))
 
 

@@ -199,6 +199,9 @@ def _run_stack(params_blocks, cfg: ModelConfig, x, *, positions, mode,
         aux = jnp.float32(0.0)
         new_cs = []
         xc = _constrain_act(xc, cfg)
+        # detlint: ok[DET002] aux-loss scalar chain across unrolled
+        # blocks: legacy bits pinned by tests; front-door routing is the
+        # knob-gated follow-up (docs/algebra.md)
         for j, spec in enumerate(pattern):
             c_j = None if cs is None else cs[j]
             xc, nc, a = _apply_block(bps[j], spec, xc, cfg,
@@ -231,10 +234,10 @@ def _run_stack(params_blocks, cfg: ModelConfig, x, *, positions, mode,
             ys.append(y)
         new_caches, auxs = jax.tree.map(lambda *t: jnp.stack(t), *ys) \
             if ys else ((), jnp.zeros((0,)))
-        return x, list(new_caches), jnp.sum(auxs)
+        return x, list(new_caches), jnp.sum(auxs)  # detlint: ok[DET001] L aux scalars
     x, (new_caches, auxs) = jax.lax.scan(
         scan_fn, x, (tuple(params_blocks), cs_stacked))
-    return x, list(new_caches), jnp.sum(auxs)
+    return x, list(new_caches), jnp.sum(auxs)  # detlint: ok[DET001] L aux scalars
 
 
 # ---------------------------------------------------------------------------
@@ -355,9 +358,12 @@ def loss_fn(params, cfg: ModelConfig, batch, *, moe_impl="capacity",
             lg = jax.lax.with_sharding_constraint(lg, logits_pspec)
         lse = jax.nn.logsumexp(lg, axis=-1)
         iota = jnp.arange(lg.shape[-1], dtype=jnp.int32)
+        # detlint: ok[DET001] per-chunk xent math (label gather + masked
+        # loss): legacy bits pinned by tests
         lab_logit = jnp.sum(
             jnp.where(iota[None, None, :] == lab_c[..., None], lg, 0.0),
             axis=-1)
+        # detlint: ok[DET001] same xent chunk reduction as above
         return jnp.sum((lse - lab_logit) * m_c)
 
     if chunk == s:
@@ -374,10 +380,10 @@ def loss_fn(params, cfg: ModelConfig, batch, *, moe_impl="capacity",
         nll, _ = jax.lax.scan(
             body, jnp.float32(0.0),
             (resh(hidden), resh(labels), resh(mask)))
-    xent = nll / jnp.maximum(mask.sum(), 1.0)
+    xent = nll / jnp.maximum(mask.sum(), 1.0)  # detlint: ok[DET001] token count, B*S well under 2^24
     loss = xent + aux_weight * aux
     return loss, {"xent": xent, "aux": aux,
-                  "tokens": mask.sum()}
+                  "tokens": mask.sum()}  # detlint: ok[DET001] logging metric
 
 
 # ---------------------------------------------------------------------------

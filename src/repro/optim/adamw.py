@@ -64,7 +64,7 @@ def global_norm(tree, *, policy: Optional[str] = None) -> jnp.ndarray:
     if not leaves:
         return jnp.float32(0.0)
     if policy is None:
-        sq = [jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves]
+        sq = [jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves]  # detlint: ok[DET001] policy=None legacy path (pairwise tree), bits pinned; global_norm(policy=) is the front door
         return jnp.sqrt(pairwise_tree_sum(jnp.stack(sq), axis=0))
     from repro import reduce as _reduce
     sq = [_leaf_sumsq(x, policy) for x in leaves]

@@ -342,6 +342,8 @@ class CascadeAccumulator:
         out = []
         for k in range(1, self.depth + 1):
             s = sa[k - 1] + sb[k - 1]
+            # detlint: ok[DET002] closed-form cascade merge: fixed small
+            # depth, order is part of the formula; property tests pin it
             for j in range(1, k):
                 r = k - j               # C(m + r - 1, r), m traced
                 coef = jnp.float32(1.0)
@@ -431,6 +433,8 @@ def merge_across(acc: Accumulator, state, axis_names):
         lambda x: jax.lax.all_gather(x, axes, axis=0), state)
     nshards = jax.tree.leaves(gathered)[0].shape[0]
     merged = jax.tree.map(lambda x: x[0], gathered)
+    # detlint: ok[DET002] strict device-order merge is the contract:
+    # merge chains are two_sum data-dependent or integer-exact
     for k in range(1, nshards):
         merged = acc.merge(merged, jax.tree.map(lambda x: x[k], gathered))
     return merged

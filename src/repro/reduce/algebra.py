@@ -226,7 +226,7 @@ def poly_weights(n: int, coeffs: Sequence[float]) -> jnp.ndarray:
     >>> [float(v) for v in poly_weights(4, (1.0, 2.0))]
     [1.0, 3.0, 5.0, 7.0]
     """
-    i = jnp.arange(n, dtype=jnp.float32)
+    i = jnp.arange(n, dtype=jnp.float32)  # detlint: ok[DET006] time-index weights are float by definition; max_terms bounds n <= 2^24 where the grid is exact
     w = jnp.zeros((n,), jnp.float32)
     for c in reversed(tuple(coeffs)):
         w = w * i + jnp.float32(c)

@@ -238,7 +238,7 @@ def _dispatch(values, segment_ids, *, spec: ReduceSpec, num_segments: int,
             ids_safe = jnp.where(segment_ids >= 0, segment_ids,
                                  num_segments)
             cnt = jnp.zeros((num_segments + 1, 1), jnp.int32) \
-                .at[ids_safe].add(1)[:num_segments]        # (S, 1)
+                .at[ids_safe].add(1, mode="drop")[:num_segments]   # (S, 1)
         else:
             cnt = jnp.zeros((num_segments, 1), jnp.int32)
     out = op_.post(out, cnt)
@@ -289,6 +289,8 @@ def _reduce_degrade(values, segment_ids, *, spec: ReduceSpec,
         acc = jnp.zeros((num_segments, d), jnp.float32)
         comp = jnp.zeros_like(acc)
         status = _status_false()
+        # detlint: ok[DET002] eager-only degrade fold: runs outside jit
+        # at dispatch boundaries, XLA never sees the cross-chunk chain
         for i in range(0, n, chunk):
             part, st = run(values[i:i + chunk], segment_ids[i:i + chunk])
             acc, err = intac.two_sum(acc, part)
@@ -319,7 +321,7 @@ def _reduce_degrade(values, segment_ids, *, spec: ReduceSpec,
             mids = mask_out_of_range(segment_ids, num_segments)
             ids_safe = jnp.where(mids >= 0, mids, num_segments)
             cnt = jnp.zeros((num_segments + 1, 1), jnp.int32) \
-                .at[ids_safe].add(1)[:num_segments]
+                .at[ids_safe].add(1, mode="drop")[:num_segments]
         else:
             cnt = jnp.zeros((num_segments, 1), jnp.int32)
     out = op_.post(out, cnt)

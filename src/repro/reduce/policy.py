@@ -338,10 +338,14 @@ class Policy:
         nl = max(1, min(int(lanes), b))
         bounds = [(k * b) // nl for k in range(nl + 1)]
         total = None
+        # detlint: ok[DET002] lane partials: integer domains add
+        # associatively (exact); float lanes are the fast tier's
+        # documented tolerance (docs/policies.md)
         for k in range(nl):
             lo, hi = bounds[k], bounds[k + 1]
             part = jnp.zeros((num_segments + 1, v.shape[1]),
-                             self.acc_dtype).at[safe[lo:hi]].add(v[lo:hi])
+                             self.acc_dtype).at[safe[lo:hi]].add(
+                                 v[lo:hi], mode="drop")
             total = part if total is None else total + part
         return total[:num_segments]
 
@@ -411,6 +415,8 @@ class Policy:
         gathered = tuple(jax.lax.all_gather(c, axes, axis=0) for c in carry)
         nshards = gathered[0].shape[0]
         merged = tuple(g[0] for g in gathered)
+        # detlint: ok[DET002] strict device-order merge is the contract:
+        # merge chains are two_sum data-dependent or integer-exact
         for k in range(1, nshards):
             merged = self.merge(merged, tuple(g[k] for g in gathered))
         return merged
@@ -611,6 +617,7 @@ class Exact2Policy(Policy):
         nlo, w2 = intac.wrap_add(lo, clo)
         nrb, w3 = intac.wrap_add(rbins, contrib[:, dd:])
         wb = w1.astype(jnp.int32) + w2.astype(jnp.int32)
+        # detlint: ok[DET002] int32 wrap-flag adds: associative, exact
         for k in range(intac.RES_NUM_BINS):
             wb = wb + w3[:, k * dd:(k + 1) * dd].astype(jnp.int32)
         return (nhi, nlo, nrb, ovf + wb)
@@ -681,6 +688,7 @@ class ProcrastinatePolicy(Policy):
         nb, w = intac.wrap_add(bins, contrib)
         dd = ovf.shape[1]
         wb = jnp.zeros_like(ovf)
+        # detlint: ok[DET002] int32 wrap-flag adds: associative, exact
         for k in range(intac.NUM_BINS):
             wb = wb + w[:, k * dd:(k + 1) * dd].astype(jnp.int32)
         return (nb, ovf + wb)

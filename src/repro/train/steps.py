@@ -89,7 +89,7 @@ def make_train_step(cfg: ModelConfig, *, lr_fn: Callable,
                     _reduce.accumulate_microbatch_grads(
                         grad_fn, params, mbs,
                         num_microbatches=num_microbatches, mean=True)
-            loss = jnp.mean(losses)
+            loss = jnp.mean(losses)  # detlint: ok[DET001] m microbatch scalars; grads take the front door above
             metrics = jax.tree.map(jnp.mean, metricses)
         else:
             grads, (loss, metrics) = grad_fn(params, batch)

@@ -1,0 +1,449 @@
+"""The determinism linter, linted: fixture twins per AST rule, waiver
+pragma semantics, the ratchet, and the jaxpr contract checker catching
+a deliberately broken policy.
+
+Layer-1 fixtures go through ``walker.parse_source`` — the same path
+real files take — with fake paths placed inside/outside the front-door
+directories to exercise ``applies``.  Layer-2 tests register a broken
+policy in the live registry (cleaned up in ``finally``) and assert the
+contract checker flags it loudly.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import detlint  # noqa: E402
+from repro.analysis import rules, walker  # noqa: E402
+from repro.analysis.rules import Finding  # noqa: E402
+
+MODELS = "src/repro/models/fixture.py"
+REDUCE = "src/repro/reduce/fixture.py"
+SERVE = "src/repro/serve/fixture.py"
+
+
+def lint(text: str, path: str, rule_id: str):
+    """Run one AST rule over a fixture snippet; returns its findings."""
+    mod = walker.parse_source(text, path)
+    (rule,) = [r for r in rules.AST_RULES if r.rule == rule_id]
+    return rule.run(mod)
+
+
+def unwaived(findings):
+    return [f for f in findings if not f.waived]
+
+
+# ---------------------------------------------------------------------------
+# DET001 — raw reductions outside the front door
+# ---------------------------------------------------------------------------
+
+
+def test_det001_flags_raw_sum_in_models():
+    src = "import jax.numpy as jnp\n\ndef f(x):\n    return jnp.sum(x)\n"
+    assert unwaived(lint(src, MODELS, "DET001"))
+
+
+def test_det001_flags_method_sum_and_psum():
+    src = ("import jax\n"
+           "def f(x):\n"
+           "    a = x.sum(axis=0)\n"
+           "    return jax.lax.psum(a, 'dp')\n")
+    found = unwaived(lint(src, MODELS, "DET001"))
+    assert len(found) == 2
+
+
+def test_det001_ignores_reduce_internals_and_front_door_calls():
+    src = "import jax.numpy as jnp\n\ndef f(x):\n    return jnp.sum(x)\n"
+    assert not lint(src, REDUCE, "DET001")      # implementation layer
+    front = ("from repro.reduce import reduce\n"
+             "def f(x):\n    return reduce(x, op='sum')\n")
+    assert not lint(front, MODELS, "DET001")
+
+
+def test_det001_ignores_host_math_roots():
+    src = ("import numpy as np, math, jax\n"
+           "def f(x, xs):\n"
+           "    _ = jax.device_count()\n"
+           "    return np.sum(x) + math.fsum(xs)\n")
+    # np.*/math.* are host-side: deterministic already, not the rule's
+    # business (the method form on an *unknown* root still flags)
+    assert not lint(src, MODELS, "DET001")
+
+
+# ---------------------------------------------------------------------------
+# DET002 — float fold loops without optimization_barrier
+# ---------------------------------------------------------------------------
+
+_FOLD = """\
+import jax.numpy as jnp
+
+def fold(blocks):
+    acc = jnp.zeros((4,))
+    for b in blocks:
+        c = jnp.asarray(b)
+        acc = acc + c
+    return acc
+"""
+
+
+def test_det002_flags_barrierless_fold():
+    found = unwaived(lint(_FOLD, MODELS, "DET002"))
+    assert len(found) == 1 and "`acc`" in found[0].message
+
+
+def test_det002_barrier_in_loop_clears():
+    src = _FOLD.replace("acc = acc + c",
+                        "acc = jax.lax.optimization_barrier(acc + c)")
+    assert not lint(src, MODELS, "DET002")
+
+
+def test_det002_ignores_host_int_folds():
+    src = ("import jax.numpy as jnp\n"
+           "def count(params):\n"
+           "    total = 0\n"
+           "    for p in params:\n"
+           "        total += int(p.size)\n"
+           "    return jnp.zeros((total,))\n")
+    assert not lint(src, MODELS, "DET002")
+
+
+def test_det002_flags_tuple_fold_calls():
+    src = ("import jax.numpy as jnp\n"
+           "from repro.core.floats import two_sum\n"
+           "def resolve(parts):\n"
+           "    acc, err = jnp.float32(0), jnp.float32(0)\n"
+           "    for p in parts:\n"
+           "        acc, e = two_sum(acc, p)\n"
+           "        err = err + e\n"
+           "    return acc + err\n")
+    found = unwaived(lint(src, MODELS, "DET002"))
+    assert found and "`acc`" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# DET003 — .at[] scatters without explicit mode=
+# ---------------------------------------------------------------------------
+
+
+def test_det003_flags_modeless_scatter():
+    src = ("import jax.numpy as jnp\n"
+           "def f(out, ids, v):\n"
+           "    return out.at[ids].add(v)\n")
+    assert unwaived(lint(src, MODELS, "DET003"))
+
+
+def test_det003_explicit_mode_clears():
+    src = ("import jax.numpy as jnp\n"
+           "def f(out, ids, v):\n"
+           "    return out.at[ids].add(v, mode='drop')\n")
+    assert not lint(src, MODELS, "DET003")
+
+
+# ---------------------------------------------------------------------------
+# DET004 — bare random.split in serving code
+# ---------------------------------------------------------------------------
+
+
+def test_det004_flags_split_in_serve_only():
+    src = ("import jax\n"
+           "def step(key):\n"
+           "    key, sub = jax.random.split(key)\n"
+           "    return sub\n")
+    assert unwaived(lint(src, SERVE, "DET004"))
+    assert not lint(src, MODELS, "DET004")      # rule is serve/-scoped
+
+
+def test_det004_fold_in_clears():
+    src = ("import jax\n"
+           "def step(seed, rid, t):\n"
+           "    return jax.random.fold_in(jax.random.fold_in(seed, rid), t)\n")
+    assert not lint(src, SERVE, "DET004")
+
+
+# ---------------------------------------------------------------------------
+# DET006 — f32 count/index arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_det006_flags_float_ones_count_and_float_arange():
+    src = ("import jax.numpy as jnp\n"
+           "def f(ids, n):\n"
+           "    ones = jnp.ones((n,), jnp.float32)\n"
+           "    c = jnp.sum(ones)\n"
+           "    i = jnp.arange(n, dtype=jnp.float32)\n"
+           "    return c, i\n")
+    found = unwaived(lint(src, REDUCE, "DET006"))
+    assert len(found) == 2
+
+
+def test_det006_int_counts_clear():
+    src = ("import jax.numpy as jnp\n"
+           "def f(ids, n):\n"
+           "    ones = jnp.ones((n,), jnp.int32)\n"
+           "    return jnp.sum(ones), jnp.arange(n)\n")
+    assert not lint(src, REDUCE, "DET006")
+
+
+# ---------------------------------------------------------------------------
+# Waiver pragmas
+# ---------------------------------------------------------------------------
+
+
+def test_same_line_pragma_waives():
+    src = ("import jax.numpy as jnp\n"
+           "def f(x):\n"
+           "    return jnp.sum(x)  # detlint: ok[DET001] scalar summary\n")
+    (f,) = lint(src, MODELS, "DET001")
+    assert f.waived and f.reason == "scalar summary"
+
+
+def test_comment_pragma_covers_next_code_line_through_comments():
+    src = ("import jax.numpy as jnp\n"
+           "def f(blocks):\n"
+           "    acc = jnp.zeros((4,))\n"
+           "    # detlint: ok[DET002] order pinned by data dependence\n"
+           "    # (continuation of the justification)\n"
+           "\n"
+           "    for b in blocks:\n"
+           "        c = jnp.asarray(b)\n"
+           "        acc = acc + c\n"
+           "    return acc\n")
+    (f,) = lint(src, MODELS, "DET002")
+    assert f.waived
+
+
+def test_wrong_rule_id_does_not_waive():
+    src = ("import jax.numpy as jnp\n"
+           "def f(x):\n"
+           "    return jnp.sum(x)  # detlint: ok[DET003] wrong rule\n")
+    (f,) = lint(src, MODELS, "DET001")
+    assert not f.waived
+
+
+def test_pragma_inside_multiline_call_span_waives():
+    src = ("import jax.numpy as jnp\n"
+           "def f(x):\n"
+           "    return jnp.sum(\n"
+           "        x,  # detlint: ok[DET001] spans the call\n"
+           "        axis=0,\n"
+           "    )\n")
+    (f,) = lint(src, MODELS, "DET001")
+    assert f.waived
+
+
+# ---------------------------------------------------------------------------
+# The ratchet
+# ---------------------------------------------------------------------------
+
+
+def test_ratchet_fails_on_increase_passes_on_equal_notes_decrease():
+    base = {"DET001": 3, "DET002": 2}
+    errors, notes = detlint.check_ratchet({"DET001": 3, "DET002": 2}, base)
+    assert not errors and not notes
+    errors, _ = detlint.check_ratchet({"DET001": 4, "DET002": 2}, base)
+    assert len(errors) == 1 and "DET001" in errors[0]
+    errors, notes = detlint.check_ratchet({"DET001": 3, "DET002": 1}, base)
+    assert not errors and len(notes) == 1 and "DET002" in notes[0]
+    # a brand-new rule with waivers is an increase from 0
+    errors, _ = detlint.check_ratchet({"DET009": 1}, {})
+    assert errors
+
+
+def test_baseline_file_matches_live_waiver_counts():
+    """tools/detlint_baseline.json is the checked-in ratchet state: it
+    must equal the current per-rule waiver counts exactly (CI fails on
+    increase; a stale-high baseline would let new waivers slip in)."""
+    import json
+    files = walker.iter_source_files([REPO / "src" / "repro"])
+    counts = detlint.waiver_counts(rules.run_lint(files))
+    baseline = json.loads((REPO / "tools" /
+                           "detlint_baseline.json").read_text())
+    ast_rules = {k: v for k, v in baseline.items()
+                 if not k.startswith("DET1")}
+    assert counts == ast_rules, (
+        f"baseline drift: live {counts} vs pinned {ast_rules} — run "
+        f"`python tools/detlint.py --write-baseline`")
+
+
+# ---------------------------------------------------------------------------
+# The repo itself is clean
+# ---------------------------------------------------------------------------
+
+
+def test_repo_has_zero_unwaived_ast_findings():
+    files = walker.iter_source_files([REPO / "src" / "repro"])
+    found = unwaived(rules.run_lint(files))
+    assert not found, "\n".join(str(f) for f in found)
+
+
+def test_every_waiver_states_a_reason():
+    files = walker.iter_source_files([REPO / "src" / "repro"])
+    bare = [f for f in rules.run_lint(files) if f.waived and not f.reason]
+    assert not bare, "\n".join(str(f) for f in bare)
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: jaxpr contract checks
+# ---------------------------------------------------------------------------
+
+
+def test_count_primitive_recurses_into_scan_bodies():
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis import contracts
+
+    def barrierless(v):
+        acc = jnp.zeros((2,))
+        for i in range(4):
+            acc = acc + v[i]
+        return acc
+
+    def pinned(v):
+        def body(acc, row):
+            return jax.lax.optimization_barrier(acc + row), None
+        acc, _ = jax.lax.scan(body, jnp.zeros((2,)), v)
+        return acc
+
+    vals = jnp.ones((4, 2))
+    assert contracts.count_primitive(
+        jax.make_jaxpr(barrierless)(vals), "optimization_barrier") == 0
+    # the barrier lives in the scan *body* jaxpr: counting must recurse
+    assert contracts.count_primitive(
+        jax.make_jaxpr(pinned)(vals), "optimization_barrier") >= 1
+
+
+def test_contracts_clean_on_live_registries():
+    """The full traced matrix: carry dtypes, barriers, invariance and
+    coverage all hold; the only expected finding is the documented
+    ``fast``-tier float-merge tolerance, surfaced as *waived*."""
+    from repro.analysis import contracts
+    findings = contracts.run_contracts()
+    assert not [f for f in findings if not f.waived], \
+        "\n".join(str(f) for f in findings)
+    assert any(f.rule == "DET102" and f.path == "fast" and f.waived
+               for f in findings)
+
+
+def test_contract_coverage_spans_the_whole_matrix():
+    """Every registered policy x backend x op that claims support must
+    trace — and the matrix must actually be the full outer product
+    (today: 6 ops x (4+4+4+3+4 supported policy/backend pairs) = 114+,
+    pinned here as >= 100 so registry growth can only raise it)."""
+    from repro.analysis.contracts import _Ctx
+    ctx = _Ctx.build()
+    combos = sum(1 for _ in ctx.ops
+                 for p in ctx.policies.values()
+                 for b in ctx.backends.values() if b.supports(p))
+    assert combos >= 100
+    assert combos == len(ctx.ops) * sum(
+        1 for p in ctx.policies.values()
+        for b in ctx.backends.values() if b.supports(p))
+
+
+def test_det101_catches_wrong_carry_dtype():
+    """A policy declaring an int32 carry while its fold actually carries
+    f32 is exactly the bug the carry contract exists for."""
+    import jax.numpy as jnp
+    from repro.analysis import contracts
+    from repro.reduce.policy import POLICIES, Policy
+
+    class _BrokenInt(Policy):
+        name = "_broken_int"
+        merge_is_add = True
+
+        @property
+        def carry_dtypes(self):
+            return (jnp.int32,)        # lies: update() folds f32
+
+        def update(self, carry, contrib):
+            (c,) = carry
+            return (c.astype(jnp.float32) + contrib,)
+
+    POLICIES["_broken_int"] = _BrokenInt()
+    try:
+        findings = contracts.run_contracts(checks=("carry",))
+        hits = [f for f in findings
+                if f.rule == "DET101" and "_broken_int" in f.path
+                and not f.waived]
+        assert hits, "\n".join(str(f) for f in findings)
+    finally:
+        del POLICIES["_broken_int"]
+
+
+def test_det102_catches_unallowlisted_float_merge():
+    """merge_is_add + float carry leaves without a tolerance entry must
+    surface as an *unwaived* DET102 (the fast tier only passes because
+    TOLERATED_FLOAT_MERGE vouches for it)."""
+    from repro.analysis import contracts
+    from repro.reduce.policy import POLICIES, Policy
+
+    class _FloatMerge(Policy):
+        name = "_float_merge"
+        merge_is_add = True            # psum of float partials, no waiver
+
+    POLICIES["_float_merge"] = _FloatMerge()
+    try:
+        findings = contracts.run_contracts(checks=("carry",))
+        hits = [f for f in findings
+                if f.rule == "DET102" and f.path == "_float_merge"]
+        assert hits and not hits[0].waived
+    finally:
+        del POLICIES["_float_merge"]
+
+
+def test_det005_catches_missing_hook_signature():
+    """A registered policy whose ``update`` cannot accept the schedule's
+    two positional args is flagged by the registry reflection rule."""
+    from repro.reduce.policy import POLICIES, Policy
+
+    class _BadHook(Policy):
+        name = "_bad_hook"
+
+        def update(self, carry):       # schedule calls update(carry, c)
+            return carry
+
+    POLICIES["_bad_hook"] = _BadHook()
+    try:
+        findings = rules.check_registries()
+        hits = [f for f in findings
+                if f.rule == "DET005" and "_bad_hook" in f.message
+                and not f.waived]
+        assert hits, "\n".join(str(f) for f in findings)
+    finally:
+        del POLICIES["_bad_hook"]
+
+
+# ---------------------------------------------------------------------------
+# The CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_exits_zero_on_clean_repo_with_ratchet():
+    assert detlint.main(["--ast-only", "--check-waivers", "-q"]) == 0
+
+
+def test_cli_exits_nonzero_on_dirty_fixture(tmp_path):
+    bad = tmp_path / "src" / "repro" / "models" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import jax.numpy as jnp\n"
+                   "def f(x):\n"
+                   "    return jnp.sum(x)\n")
+    assert detlint.main(["--ast-only", "-q", str(bad)]) == 1
+
+
+def test_symbol_origin_ok_rejects_stale_reexport():
+    """The moved-module guard the doc checker now runs: a documented
+    path resolving only through a foreign package's re-export fails."""
+    import repro.serve as serve
+    import repro.reduce as reduce_pkg
+    serve.ReduceOp = reduce_pkg.ReduceOp       # simulate a stale re-export
+    try:
+        assert walker.symbol_resolves("repro.serve.ReduceOp")
+        assert not walker.symbol_origin_ok("repro.serve.ReduceOp")
+        assert walker.symbol_origin_ok("repro.reduce.ReduceOp")
+    finally:
+        del serve.ReduceOp

@@ -16,12 +16,18 @@ Scans README.md and docs/*.md for
 Exits non-zero listing every dangling reference, so CI fails on drift
 (e.g. a doc still naming a deleted shim like ``segment_sum_blocked``).
 
+Symbol resolution is shared with the determinism linter
+(``repro.analysis.walker``): REQUIRED_SYMBOLS entries must not only
+resolve but *originate* under their documented package
+(``symbol_origin_ok``), so a symbol that moves modules while a stale
+package re-export keeps the old path importable fails here instead of
+silently passing.
+
     PYTHONPATH=src python tools/check_docs.py
 """
 
 from __future__ import annotations
 
-import importlib
 import re
 import sys
 from pathlib import Path
@@ -34,6 +40,8 @@ REPO = Path(__file__).resolve().parent.parent
 for _p in (str(REPO), str(REPO / "src")):
     if _p not in sys.path:
         sys.path.insert(0, _p)
+
+from repro.analysis import walker  # noqa: E402
 
 #: files whose references we hold to the resolve-or-fail bar
 DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
@@ -90,17 +98,35 @@ REQUIRED_SYMBOLS = [
     "repro.reduce.cascade_poly_coeffs",
     "repro.reduce.collective_weighted_mean",
     "repro.reduce.collective_moments",
+    # the determinism-lint surface (docs/determinism-lint.md): the AST
+    # rules, the jaxpr contract checker, and the shared walker they and
+    # this very checker discover/resolve through
+    "repro.analysis.run_lint",
+    "repro.analysis.Finding",
+    "repro.analysis.LintRule",
+    "repro.analysis.run_contracts",
+    "repro.analysis.walker.iter_source_files",
+    "repro.analysis.walker.parse_source",
+    "repro.analysis.walker.resolve_symbol",
+    "repro.analysis.walker.symbol_origin_ok",
 ]
 
 
 def check_required_symbols() -> list:
-    """Every REQUIRED_SYMBOLS entry must import *and* be mentioned (by
-    its unqualified name) somewhere in the doc set."""
+    """Every REQUIRED_SYMBOLS entry must import, *originate* under its
+    documented package (``walker.symbol_origin_ok`` — catches stale
+    re-exports after a cross-package move), and be mentioned (by its
+    unqualified name) somewhere in the doc set."""
     errors = []
     docs_text = "\n".join(p.read_text() for p in DOC_FILES)
     for ref in REQUIRED_SYMBOLS:
-        if not _symbol_resolves(ref):
+        if not walker.symbol_resolves(ref):
             errors.append(f"required symbol {ref!r} does not resolve")
+        elif not walker.symbol_origin_ok(ref):
+            errors.append(
+                f"required symbol {ref!r} resolves but is defined in "
+                f"{walker.symbol_origin(ref)!r} — moved module? update "
+                f"the docs and this pin")
         if ref.rsplit(".", 1)[-1] not in docs_text:
             errors.append(f"required symbol {ref!r} is not mentioned in "
                           f"any doc file")
@@ -124,22 +150,6 @@ def _resolve_path(ref: str):
 
 def _path_resolves(ref: str) -> bool:
     return _resolve_path(ref) is not None
-
-
-def _symbol_resolves(ref: str) -> bool:
-    parts = ref.split(".")
-    for cut in range(len(parts), 0, -1):
-        try:
-            obj = importlib.import_module(".".join(parts[:cut]))
-        except ImportError:
-            continue
-        try:
-            for attr in parts[cut:]:
-                obj = getattr(obj, attr)
-        except AttributeError:
-            return False
-        return True
-    return False
 
 
 def check_file(path: Path) -> list:
@@ -170,7 +180,7 @@ def check_file(path: Path) -> list:
             if not _path_resolves(ref):
                 errors.append(f"{path.name}: dangling path {ref!r}")
         elif _DOTTED.match(ref):
-            if not _symbol_resolves(ref):
+            if not walker.symbol_resolves(ref):
                 errors.append(f"{path.name}: unresolvable symbol {ref!r}")
     return errors
 

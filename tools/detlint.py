@@ -1,0 +1,122 @@
+"""detlint: the determinism-contract static analyzer (CI hard gate).
+
+Layer 1 lints ``src/repro`` ASTs with the DET001–DET006 rules
+(``repro.analysis.rules``); layer 2 ``make_jaxpr``-traces every
+registered policy × backend × op and checks the carry/barrier/
+invariance contracts (DET101–DET105, ``repro.analysis.contracts``).
+See docs/determinism-lint.md for the rule table and waiver policy.
+
+    PYTHONPATH=src python tools/detlint.py                 # full run
+    PYTHONPATH=src python tools/detlint.py --ast-only      # no tracing
+    PYTHONPATH=src python tools/detlint.py --check-waivers # + ratchet
+    PYTHONPATH=src python tools/detlint.py --write-baseline
+
+Exit status: nonzero on any unwaived finding; ``--check-waivers``
+additionally fails when a rule's waiver count rises above
+``tools/detlint_baseline.json`` (the ratchet: waivers may only go
+down — tighten the baseline when they do).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+for _p in (str(REPO), str(REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.analysis import walker, rules  # noqa: E402
+
+BASELINE = REPO / "tools" / "detlint_baseline.json"
+DEFAULT_ROOTS = ("src/repro",)
+
+
+def waiver_counts(findings) -> dict:
+    return dict(Counter(f.rule for f in findings if f.waived))
+
+
+def check_ratchet(counts: dict, baseline: dict):
+    """(errors, notes): errors when a rule's waiver count rose above the
+    baseline; notes when it fell (tighten the baseline)."""
+    errors, notes = [], []
+    for rule in sorted(set(counts) | set(baseline)):
+        now, base = counts.get(rule, 0), baseline.get(rule, 0)
+        if now > base:
+            errors.append(
+                f"{rule}: {now} waivers > baseline {base} — new waivers "
+                f"need a reviewed reason AND a baseline bump in the same "
+                f"change (tools/detlint_baseline.json)")
+        elif now < base:
+            notes.append(
+                f"{rule}: {now} waivers < baseline {base} — ratchet down: "
+                f"run --write-baseline to lock in the improvement")
+    return errors, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="detlint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src/repro)")
+    ap.add_argument("--ast-only", action="store_true",
+                    help="skip the jaxpr contract checks (layer 2)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (layer 1)")
+    ap.add_argument("--check-waivers", action="store_true",
+                    help="enforce the waiver-count ratchet against "
+                         "tools/detlint_baseline.json")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the waiver baseline from this run")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="only print failures")
+    args = ap.parse_args(argv)
+
+    roots = args.paths or [str(REPO / r) for r in DEFAULT_ROOTS]
+    rule_filter = (set(r.strip() for r in args.rules.split(","))
+                   if args.rules else None)
+
+    files = walker.iter_source_files(roots)
+    findings = rules.run_lint(files, rules=rule_filter)
+    if not args.ast_only and rule_filter is None:
+        from repro.analysis import contracts
+        findings.extend(contracts.run_contracts())
+
+    unwaived = [f for f in findings if not f.waived]
+    counts = waiver_counts(findings)
+
+    for f in unwaived:
+        print(f)
+    if not args.quiet:
+        waived = [f for f in findings if f.waived]
+        per_rule = ", ".join(f"{r}={n}" for r, n in sorted(counts.items()))
+        print(f"detlint: {len(files)} files, {len(unwaived)} unwaived "
+              f"finding(s), {len(waived)} waived ({per_rule or 'none'})")
+
+    status = 1 if unwaived else 0
+
+    if args.write_baseline:
+        BASELINE.write_text(json.dumps(counts, indent=2, sort_keys=True)
+                            + "\n")
+        print(f"detlint: baseline written to {BASELINE}")
+    elif args.check_waivers:
+        baseline = json.loads(BASELINE.read_text()) if BASELINE.exists() \
+            else {}
+        errors, notes = check_ratchet(counts, baseline)
+        for e in errors:
+            print(f"detlint ratchet: {e}")
+        for n in notes:
+            print(f"detlint ratchet (note): {n}")
+        if errors:
+            status = 1
+
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())
